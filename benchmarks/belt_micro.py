@@ -1,0 +1,59 @@
+"""In-JAX belt micro-benchmarks: wall time of a belt round on this host and
+collective accounting of the compiled SPMD round (the protocol's only
+collective is the token ppermute — measured, not asserted)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Engine, EngineSpec, VirtualBelt, classify
+from repro.core.serial import make_batches
+from repro.core.workloads import micro
+
+
+def belt_round_timing(n_servers=4, rounds=30) -> dict:
+    db = micro.make_db()
+    cl = classify(db, micro.TXNS)
+    eng = Engine(db, micro.TXNS, cl,
+                 EngineSpec(n_servers=n_servers, batch=8, queue_cap=32,
+                            token_cap=128))
+    belt = VirtualBelt(eng, db.init_state())
+    ops = micro.sample_ops(rounds * 8, local_ratio=0.7, seed=0)
+    pending = [(i, t, p) for i, (t, p) in enumerate(ops)]
+    # warmup
+    batch, pending = make_batches(eng, pending[:8], 0)[0], pending[8:]
+    belt.run_round(batch)
+    t0 = time.time()
+    done = 0
+    for r in range(1, rounds):
+        take, pending = pending[:8], pending[8:]
+        batch, leftover = make_batches(eng, take, r)
+        pending = leftover + pending
+        belt.run_round(batch)
+        done += 1
+    dt = (time.time() - t0) / max(done, 1)
+    print(f"belt_round_n{n_servers},{dt*1e6:.0f},ops_per_round=8")
+    return {"bench": "belt_round", "n_servers": n_servers,
+            "us_per_round": dt * 1e6}
+
+
+def delta_apply_timing(R=4096, W=8, K=256) -> dict:
+    from repro.kernels.delta_apply.ops import delta_apply_op
+
+    key = jax.random.PRNGKey(0)
+    table = jax.random.randint(key, (R, W), 0, 100)
+    rows = jax.random.randint(key, (K,), 0, R)
+    vals = jax.random.randint(key, (K, W), 0, 100)
+    valid = np.ones((K,), bool)
+    out = delta_apply_op(table, rows, vals, valid)  # warm
+    jax.block_until_ready(out)
+    t0 = time.time()
+    n = 10
+    for _ in range(n):
+        out = delta_apply_op(out, rows, vals, valid)
+    jax.block_until_ready(out)
+    dt = (time.time() - t0) / n
+    print(f"delta_apply_{R}x{W}_k{K},{dt*1e6:.0f},interpret-mode")
+    return {"bench": "delta_apply", "us_per_call": dt * 1e6}

@@ -1,0 +1,77 @@
+"""Conveyor-DP vs synchronous all-reduce (the framework-level realization of
+the paper's Eliá-vs-MySQL-Cluster comparison).
+
+On this CPU host we measure: (a) wall time per step for R=2 replicas under
+belt sync vs a single sync step at 2× batch (same total tokens), (b) wire
+bytes (int8 belt vs bf16 all-reduce equivalent), (c) loss parity after N
+steps."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLM
+from repro.launch.conveyor_dp import ConveyorDP
+from repro.launch.steps import make_train_step
+from repro.launch.train import scaled_config
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.optim.adamw import adamw_init
+
+
+def run(steps=20, arch="qwen3-1.7b", scale=0.04, seq=64, batch=4) -> list[dict]:
+    cfg = scaled_config(arch, scale, seq)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, total_steps=steps))
+    ds = SyntheticLM(cfg.vocab, seq, batch)
+
+    # sync baseline: one step over 2× batch
+    ds2 = SyntheticLM(cfg.vocab, seq, 2 * batch)
+    p_sync, o_sync = params, adamw_init(params)
+    b0 = {k: jnp.asarray(v) for k, v in ds2.batch(0).items()}
+    p_sync, o_sync, _ = step_fn(p_sync, o_sync, b0)  # warm
+    t0 = time.time()
+    losses_sync = []
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ds2.batch(s).items()}
+        p_sync, o_sync, m = step_fn(p_sync, o_sync, b)
+        losses_sync.append(float(m["loss"]))
+    t_sync = (time.time() - t0) / steps
+
+    # belt: 2 replicas, half batch each, int8 deltas
+    belt = ConveyorDP(step_fn, [params] * 2,
+                      [adamw_init(params) for _ in range(2)])
+    batches0 = [{k: jnp.asarray(v) for k, v in ds.batch(0).items()}] * 2
+    belt.round(batches0)  # warm
+    t0 = time.time()
+    losses_belt = []
+    for s in range(steps):
+        bs = [{k: jnp.asarray(v) for k, v in ds.batch(2 * s + r).items()}
+              for r in range(2)]
+        ms = belt.round(bs)
+        losses_belt.append(np.mean([m["loss"] for m in ms]))
+    t_belt = (time.time() - t0) / steps
+    belt.drain()
+
+    param_bytes = sum(x.size * 2 for x in jax.tree.leaves(params))
+    # ring all-reduce moves 2(R-1)/R × bytes per step (bf16)
+    allreduce_wire = 2 * (2 - 1) / 2 * param_bytes * 4  # f32 grads
+    belt_wire = belt.stats.bytes_shipped / belt.stats.rounds
+    print(f"conveyor_dp_step,{t_belt*1e6:.0f},"
+          f"sync_step_us={t_sync*1e6:.0f}|wire_ratio="
+          f"{allreduce_wire/max(belt_wire,1):.1f}x|"
+          f"loss_belt={losses_belt[-1]:.3f}|loss_sync={losses_sync[-1]:.3f}")
+    return [{
+        "bench": "conveyor_dp",
+        "t_belt_us": t_belt * 1e6,
+        "t_sync_us": t_sync * 1e6,
+        "belt_wire_bytes_per_round": belt_wire,
+        "allreduce_wire_bytes_per_step": allreduce_wire,
+        "final_loss_belt": losses_belt[-1],
+        "final_loss_sync": losses_sync[-1],
+    }]

@@ -1,0 +1,166 @@
+"""Paper-table benchmarks (one function per table/figure of the paper).
+
+All use the calibrated host-level simulator (core.hostsim) driven by the
+REAL classified workloads — same Algorithm 1, same routing as the JAX belt.
+Each returns rows of dicts and prints `name,us_per_call,derived` CSV lines
+(us_per_call = mean request latency µs; derived = headline ratio).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Engine, EngineSpec, classify
+from repro.core.hostsim import op_source_from_workload, peak_throughput, simulate
+from repro.core.workloads import micro, rubis, tpcw
+
+CLIENTS = (16, 64, 256)
+DUR = 8_000.0
+
+
+def _engine(wl, n):
+    db = wl.make_db()
+    cl = classify(db, wl.TXNS)
+    return Engine(db, wl.TXNS, cl, EngineSpec(n_servers=n)), cl
+
+
+def table1_classification() -> list[dict]:
+    """Paper Table 1: classes + workload frequencies."""
+    rows = []
+    for name, wl, sampler in (
+        ("tpcw", tpcw, lambda: tpcw.sample_ops(4000, seed=0)),
+        ("rubis", rubis, lambda: rubis.sample_ops(4000, seed=0)),
+    ):
+        eng, cl = _engine(wl, 4)
+        counts = cl.counts()
+        ops = sampler()
+        freq = {"L": 0, "G": 0, "C": 0}
+        names = [t.name for t in wl.TXNS]
+        for op_name, params in ops:
+            ti = names.index(op_name)
+            pv = np.zeros((eng.spec.max_params,), np.int32)
+            for i, pn in enumerate(eng.txns[ti].params):
+                pv[i] = params[pn]
+            _, is_global = eng.route_np(ti, pv)
+            oc = cl.classes[op_name]
+            freq["C" if oc.cls == "C" else ("G" if is_global else "L")] += 1
+        total = sum(freq.values())
+        rows.append({
+            "bench": "table1", "app": name, **counts,
+            "freq_L": freq["L"] / total, "freq_G": freq["G"] / total,
+            "freq_C": freq["C"] / total,
+        })
+        print(f"table1_{name},0,L{counts['L']}/G{counts['G']}/C{counts['C']}/"
+              f"LG{counts['LG']}|freqL={freq['L']/total:.2f}")
+    return rows
+
+
+def fig3_lan_scaling(servers=(1, 2, 4, 8, 13, 16)) -> list[dict]:
+    """Paper Fig. 3: LAN peak throughput, Eliá (conveyor) vs MySQL Cluster
+    (2PC), TPC-W + RUBiS."""
+    rows = []
+    for name, wl, sample in (
+        ("tpcw", tpcw, lambda: tpcw.sample_ops(3000, seed=1)),
+        ("rubis", rubis, lambda: rubis.sample_ops(3000, seed=1)),
+    ):
+        pool = sample()
+        best = {"conveyor": 0.0, "twopc": 0.0}
+        for n in servers:
+            eng, _ = _engine(wl, n)
+            src = op_source_from_workload(eng, pool, n)
+            for proto in ("conveyor", "twopc"):
+                th, res = peak_throughput(proto, src, n, client_grid=CLIENTS,
+                                          duration_ms=DUR)
+                best[proto] = max(best[proto], th)
+                rows.append({
+                    "bench": "fig3", "app": name, "protocol": proto,
+                    "servers": n, "peak_throughput": th,
+                    "mean_latency_ms": res.mean_latency_ms,
+                })
+        ratio = best["conveyor"] / max(best["twopc"], 1e-9)
+        print(f"fig3_{name},_,conveyor/2pc_peak_ratio={ratio:.2f}x")
+    return rows
+
+
+def fig4_wan(servers=(2, 3, 5)) -> list[dict]:
+    """Paper Fig. 4: WAN throughput/latency vs centralized + read-only."""
+    rows = []
+    for name, wl, sample in (
+        ("tpcw", tpcw, lambda: tpcw.sample_ops(3000, seed=2)),
+        ("rubis", rubis, lambda: rubis.sample_ops(3000, seed=2)),
+    ):
+        pool = sample()
+        for n in servers:
+            eng, _ = _engine(wl, n)
+            src = op_source_from_workload(eng, pool, n)
+            for proto in ("conveyor", "central", "readonly"):
+                th, res = peak_throughput(proto, src, n, wan=True,
+                                          client_grid=CLIENTS, duration_ms=DUR)
+                rows.append({
+                    "bench": "fig4", "app": name, "protocol": proto,
+                    "servers": n, "peak_throughput": th,
+                    "mean_latency_ms": res.mean_latency_ms,
+                })
+        conv = max(r["peak_throughput"] for r in rows
+                   if r["bench"] == "fig4" and r["app"] == name
+                   and r["protocol"] == "conveyor")
+        cent = max(r["peak_throughput"] for r in rows
+                   if r["bench"] == "fig4" and r["app"] == name
+                   and r["protocol"] == "central")
+        print(f"fig4_{name},_,conveyor/central_throughput={conv/max(cent,1e-9):.2f}x")
+    return rows
+
+
+def table3_latency(servers=(2, 3, 5)) -> list[dict]:
+    """Paper Table 3: light-load WAN latency vs centralized."""
+    rows = []
+    for name, wl, sample in (
+        ("tpcw", tpcw, lambda: tpcw.sample_ops(3000, seed=3)),
+        ("rubis", rubis, lambda: rubis.sample_ops(3000, seed=3)),
+    ):
+        pool = sample()
+        eng, _ = _engine(wl, 1)
+        src1 = op_source_from_workload(eng, pool, 1)
+        cent = simulate("central", src1, 1, 8, duration_ms=DUR, wan=True)
+        rows.append({"bench": "table3", "app": name, "config": "centralized",
+                     "mean_latency_ms": cent.mean_latency_ms})
+        for n in servers:
+            eng, _ = _engine(wl, n)
+            src = op_source_from_workload(eng, pool, n)
+            for proto in ("conveyor", "readonly"):
+                res = simulate(proto, src, n, 8, duration_ms=DUR, wan=True)
+                rows.append({
+                    "bench": "table3", "app": name,
+                    "config": f"{proto}-{n}",
+                    "mean_latency_ms": res.mean_latency_ms,
+                    "speedup_vs_central":
+                        cent.mean_latency_ms / max(res.mean_latency_ms, 1e-9),
+                })
+        best = max(r.get("speedup_vs_central", 0) for r in rows
+                   if r["bench"] == "table3" and r["app"] == name)
+        print(f"table3_{name},{cent.mean_latency_ms*1e3:.0f},"
+              f"best_latency_speedup={best:.1f}x")
+    return rows
+
+
+def fig5_local_ratio(ratios=(0.0, 0.3, 0.5, 0.7, 0.9)) -> list[dict]:
+    """Paper Figs. 5–6: sensitivity to the local-op fraction (3-server WAN,
+    5 ms op execution, exactly the paper's micro-benchmark)."""
+    rows = []
+    for ratio in ratios:
+        eng, _ = _engine(micro, 3)
+        src = op_source_from_workload(
+            eng, micro.sample_ops(3000, local_ratio=ratio, seed=4), 3
+        )
+        th, _ = peak_throughput("conveyor", src, 3, wan=True,
+                                client_grid=CLIENTS, duration_ms=DUR)
+        light = simulate("conveyor", src, 3, 8, duration_ms=DUR, wan=True)
+        rows.append({
+            "bench": "fig5", "local_ratio": ratio, "peak_throughput": th,
+            "mean_latency_ms": light.mean_latency_ms,
+            "mean_local_ms": light.mean_local_ms,
+            "mean_global_ms": light.mean_global_ms,
+        })
+        print(f"fig5_ratio{ratio:.1f},{light.mean_latency_ms*1e3:.0f},"
+              f"peak={th:.0f}ops/s|local={light.mean_local_ms:.0f}ms|"
+              f"global={light.mean_global_ms:.0f}ms")
+    return rows

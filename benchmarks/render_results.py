@@ -1,0 +1,77 @@
+"""Render dryrun_*.json + roofline.json into the EXPERIMENTS.md tables.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_results
+Prints markdown to stdout (pasted into EXPERIMENTS.md by the maintainer).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+GIB = 2**30
+
+
+def dryrun_table(path: str) -> str:
+    rows = json.load(open(path))
+    out = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev | flops/dev | coll/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — "
+                f"| SKIP: {r['reason'][:40]} |"
+            )
+            continue
+        if r["status"] == "error":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — "
+                f"| ERROR |"
+            )
+            continue
+        pd = r["per_device"]
+        coll = sum(r["collectives"].values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f}s "
+            f"| {pd['argument_bytes']/GIB:.2f} GiB | {pd['temp_bytes']/GIB:.2f} GiB "
+            f"| {pd['flops']:.2e} | {coll/GIB:.2f} GiB | OK |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    rows = json.load(open(path))
+    out = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant "
+        "| MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} ms "
+            f"| {r['t_memory_s']*1e3:.1f} ms | {r['t_collective_s']*1e3:.1f} ms "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']*100:.1f}% |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:] or ("dryrun_1pod.json", "dryrun_2pod.json"):
+        try:
+            print(f"\n### {p}\n")
+            print(dryrun_table(p))
+        except FileNotFoundError:
+            print(f"({p} missing)")
+    try:
+        print("\n### roofline.json\n")
+        print(roofline_table("roofline.json"))
+    except FileNotFoundError:
+        print("(roofline.json missing)")

@@ -1,0 +1,171 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+``cost_analysis`` counts a lax.scan body ONCE (verified), so scanned-layer
+graphs undercount depth.  Methodology: compile UNROLLED shallow variants at
+two depths (L₂ < L₄), take per-layer deltas
+
+    per_layer = (cost(L₄) − cost(L₂)) / (L₄ − L₂)
+    total(L)  = cost(L₂) + (L − L₂) × per_layer
+
+for FLOPs, HBM bytes, and per-kind collective bytes — exact for homogeneous
+stacks (all ours are).  Terms per chip (cost_analysis is per-device under
+SPMD):
+
+    t_compute    = FLOPs / 197e12        (bf16 peak)
+    t_memory     = bytes / 819e9         (HBM bw)
+    t_collective = coll_bytes / 50e9     (ICI per link)
+
+MODEL_FLOPS = 6·N·D (train) or 2·N·D (prefill) or 2·N_active·B (decode);
+the ratio MODEL/HLO exposes remat recompute + padding waste.
+
+Run: ``PYTHONPATH=src python -m benchmarks.roofline [--mesh 1pod]
+[--cells arch:shape,...] [--out roofline.json]``
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import all_cells, get_arch, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_chips  # noqa: E402
+from repro.launch.roofline import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    collective_bytes,
+)
+from repro.launch.steps import build_cell, lower_cell  # noqa: E402
+
+
+def _depths(arch: str) -> tuple[int, int]:
+    if arch == "zamba2-7b":
+        return 6, 12  # one vs two (5 mamba + shared attn) groups
+    return 2, 4
+
+
+def _costs(arch, shape, mesh, n_layers, tuning, overrides=None):
+    ov = dict(overrides or {})
+    ov["n_layers"] = n_layers
+    cell = build_cell(arch, shape, mesh, layer_mode="unroll",
+                      overrides=ov, **tuning)
+    compiled = lower_cell(cell).compile()
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": ca.get("flops", 0.0),
+        "bytes": ca.get("bytes accessed", 0.0),
+        "coll": sum(coll.values()),
+        "coll_by_kind": coll,
+    }, cell.cfg
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    toks = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    n = cfg.n_active_params() if cfg.n_experts else cfg.n_params()
+    if shape.kind == "train":
+        return 6.0 * n * toks / chips  # per-chip
+    # inference: the LM head runs on ONE position per request, not per token
+    n_embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    body = 2.0 * max(n - n_embed, 0) * toks
+    head = 2.0 * cfg.vocab * cfg.d_model * shape.global_batch
+    return (body + head) / chips
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, tuning=None,
+                 overrides=None) -> dict:
+    """tuning: build_cell kwargs (microbatches/opt_cfg); overrides: model
+    config overrides (remat, attn_chunk, ...) — the §Perf knobs."""
+    tuning = tuning or {}
+    shape = get_shape(shape_name)
+    l2, l4 = _depths(arch)
+    c2, cfg2 = _costs(arch, shape_name, mesh, l2, tuning, overrides)
+    c4, _ = _costs(arch, shape_name, mesh, l4, tuning, overrides)
+    full_cfg = get_arch(arch, **(overrides or {}))
+    L = full_cfg.n_layers
+
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = (c4[k] - c2[k]) / (l4 - l2)
+        out[k] = c2[k] + (L - l2) * per_layer
+        out[f"{k}_per_layer"] = per_layer
+    out["coll_by_kind"] = {
+        k: c2["coll_by_kind"][k]
+        + (L - l2) * (c4["coll_by_kind"][k] - c2["coll_by_kind"][k]) / (l4 - l2)
+        for k in c2["coll_by_kind"]
+    }
+    chips = n_chips(mesh)
+    t_c = out["flops"] / PEAK_FLOPS
+    t_m = out["bytes"] / HBM_BW
+    t_x = out["coll"] / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(full_cfg, shape, chips)
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "hlo_flops_per_chip": out["flops"],
+        "hbm_bytes_per_chip": out["bytes"],
+        "coll_bytes_per_chip": out["coll"],
+        "coll_by_kind": out["coll_by_kind"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / out["flops"] if out["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("1pod", "2pod"), default="1pod")
+    ap.add_argument("--cells", default=None,
+                    help="comma-separated arch:shape filters")
+    ap.add_argument("--out", default="roofline.json")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "2pod")
+    want = None
+    if args.cells:
+        want = {tuple(c.split(":")) for c in args.cells.split(",")}
+
+    from repro.launch.dryrun import CELL_TUNING  # shipped per-cell defaults
+
+    results = []
+    for arch, shape, ok, why in all_cells():
+        if want is not None and (arch, shape) not in want:
+            continue
+        if not ok:
+            results.append({"arch": arch, "shape": shape, "skipped": why})
+            continue
+        t0 = time.time()
+        try:
+            tuning = dict(CELL_TUNING.get((arch, shape), {}))
+            overrides = tuning.pop("overrides", None)
+            rec = analyze_cell(arch, shape, mesh, tuning=tuning,
+                               overrides=overrides)
+            rec["seconds"] = round(time.time() - t0, 1)
+            print(
+                f"{arch:22s} {shape:12s} dom={rec['dominant']:10s} "
+                f"tc={rec['t_compute_s']*1e3:8.2f}ms tm={rec['t_memory_s']*1e3:8.2f}ms "
+                f"tx={rec['t_collective_s']*1e3:8.2f}ms "
+                f"useful={rec['useful_ratio']:.2f} "
+                f"roofline={rec['roofline_fraction']*100:5.1f}%", flush=True,
+            )
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "error": repr(e)[:500]}
+            print(f"{arch:22s} {shape:12s} ERROR {e!r}", flush=True)
+        results.append(rec)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (paper_tables), the protocol
+micro-benchmarks (belt_micro), and the framework-level Conveyor-DP vs
+all-reduce comparison.  Output: ``name,us_per_call,derived`` CSV lines plus
+a results JSON.  Roofline extraction runs separately
+(``python -m benchmarks.roofline``) because it compiles ~60 cells on 512
+placeholder devices; if ``roofline.json`` is present its headline numbers
+are summarized here.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    rows = []
+    print("name,us_per_call,derived")
+
+    from benchmarks import paper_tables as pt
+
+    rows += pt.table1_classification()
+    rows += pt.fig3_lan_scaling()
+    rows += pt.fig4_wan()
+    rows += pt.table3_latency()
+    rows += pt.fig5_local_ratio()
+
+    from benchmarks import belt_micro as bm
+
+    rows.append(bm.belt_round_timing())
+    rows.append(bm.delta_apply_timing())
+
+    from benchmarks import conveyor_dp_bench as cdp
+
+    rows += cdp.run()
+
+    for path in ("roofline.json", "/root/repo/roofline.json"):
+        if os.path.exists(path):
+            with open(path) as f:
+                rl = json.load(f)
+            done = [r for r in rl if "dominant" in r]
+            if done:
+                worst = min(done, key=lambda r: r.get("roofline_fraction", 1))
+                best = max(done, key=lambda r: r.get("roofline_fraction", 0))
+                print(f"roofline_summary,_,cells={len(done)}|"
+                      f"best={best['arch']}:{best['shape']}="
+                      f"{best['roofline_fraction']*100:.0f}%|"
+                      f"worst={worst['arch']}:{worst['shape']}="
+                      f"{worst['roofline_fraction']*100:.0f}%")
+            break
+
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"# wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Inject rendered dry-run/roofline tables into EXPERIMENTS.md markers.
+
+Usage: PYTHONPATH=src python -m benchmarks.update_experiments
+Replaces <!-- DRYRUN_TABLES --> and <!-- ROOFLINE_TABLE --> in place.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.render_results import dryrun_table, roofline_table
+
+PATH = "EXPERIMENTS.md"
+
+
+def main():
+    src = open(PATH).read()
+
+    dr = []
+    for mesh, path in (("16×16 single-pod", "dryrun_1pod.json"),
+                       ("2×16×16 multi-pod", "dryrun_2pod.json")):
+        try:
+            dr.append(f"\n#### {mesh}\n\n" + dryrun_table(path))
+        except FileNotFoundError:
+            dr.append(f"\n#### {mesh}\n\n(pending)")
+    src = src.replace("<!-- DRYRUN_TABLES -->", "\n".join(dr), 1)
+
+    try:
+        rl = roofline_table("roofline.json")
+        # headline roofline numbers
+        rows = [r for r in json.load(open("roofline.json")) if "dominant" in r]
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        head = (f"\n**Headline**: best cell "
+                f"{best['arch']}:{best['shape']} at "
+                f"{best['roofline_fraction']*100:.1f}% of roofline; "
+                f"{sum(1 for r in rows if r['dominant']=='memory')} cells "
+                f"memory-bound, "
+                f"{sum(1 for r in rows if r['dominant']=='collective')} "
+                f"collective-bound, "
+                f"{sum(1 for r in rows if r['dominant']=='compute')} "
+                f"compute-bound.\n\n")
+        src = src.replace("<!-- ROOFLINE_TABLE -->", head + rl, 1)
+    except FileNotFoundError:
+        pass
+
+    open(PATH, "w").write(src)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

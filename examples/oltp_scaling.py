@@ -1,0 +1,30 @@
+"""Paper-style scaling study (Fig. 3/4 analogue) runnable in seconds: peak
+throughput of the Conveyor Belt vs 2PC on TPC-W, LAN + WAN.
+
+Run:  PYTHONPATH=src python examples/oltp_scaling.py
+"""
+from repro.core import Engine, EngineSpec, classify
+from repro.core.hostsim import op_source_from_workload, peak_throughput
+from repro.core.workloads import tpcw
+
+
+def main():
+    db = tpcw.make_db()
+    cl = classify(db, tpcw.TXNS)
+    pool = tpcw.sample_ops(3000, seed=0)
+    print(f"{'N':>3} | {'conveyor LAN':>14} | {'2PC LAN':>10} | {'conveyor WAN':>14}")
+    for n in (1, 2, 4, 8, 13):
+        eng = Engine(db, tpcw.TXNS, cl, EngineSpec(n_servers=n))
+        src = op_source_from_workload(eng, pool, n)
+        tc, _ = peak_throughput("conveyor", src, n, client_grid=(32, 128, 512),
+                                duration_ms=6000)
+        tp, _ = peak_throughput("twopc", src, n, client_grid=(32, 128, 512),
+                                duration_ms=6000)
+        tw, _ = peak_throughput("conveyor", src, n, wan=True,
+                                client_grid=(32, 128, 512), duration_ms=6000)
+        print(f"{n:3d} | {tc:11.0f} /s | {tp:7.0f} /s | {tw:11.0f} /s")
+    print("(peak throughput under the paper's 2000 ms latency bound)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model for a few
+hundred steps under BOTH sync modes — synchronous all-reduce vs Conveyor-DP
+(the paper's belt as the gradient-sync layer) — and compare loss + wire
+bytes.
+
+Run:  PYTHONPATH=src python examples/train_conveyor.py [--steps 200]
+(~100M params: scaled qwen3 at --scale 0.35 ⇒ d_model 704, 9 layers.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLM
+from repro.launch.conveyor_dp import ConveyorDP
+from repro.launch.steps import make_train_step
+from repro.launch.train import scaled_config
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.optim.adamw import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.35)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = scaled_config("qwen3-1.7b", args.scale, args.seq)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} → {n/1e6:.0f}M params")
+
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(lr=6e-4),
+                                      total_steps=args.steps))
+    ds = SyntheticLM(cfg.vocab, args.seq, args.batch)
+
+    # -- synchronous baseline (one logical step over 2x batch) ---------------
+    ds2 = SyntheticLM(cfg.vocab, args.seq, 2 * args.batch)
+    p, o = params, adamw_init(params)
+    t0 = time.time()
+    for s in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in ds2.batch(s).items()}
+        p, o, m = step_fn(p, o, b)
+        if s % 50 == 0:
+            print(f"  [sync]     step {s:4d} loss {float(m['loss']):.4f}")
+    sync_loss, sync_t = float(m["loss"]), time.time() - t0
+
+    # -- Conveyor-DP: 2 replicas, int8 deltas on the belt ---------------------
+    belt = ConveyorDP(step_fn, [params] * 2,
+                      [adamw_init(params) for _ in range(2)])
+    t0 = time.time()
+    for s in range(args.steps):
+        bs = [{k: jnp.asarray(v) for k, v in ds.batch(2 * s + r).items()}
+              for r in range(2)]
+        ms = belt.round(bs)
+        if s % 50 == 0:
+            print(f"  [conveyor] step {s:4d} loss "
+                  f"{np.mean([m['loss'] for m in ms]):.4f}")
+    belt.drain()
+    belt_loss = np.mean([m["loss"] for m in ms])
+    belt_t = time.time() - t0
+
+    print(f"\nsync:     final loss {sync_loss:.4f}  ({sync_t:.0f}s)")
+    print(f"conveyor: final loss {belt_loss:.4f}  ({belt_t:.0f}s)  wire "
+          f"{belt.stats.bytes_shipped/2**20:.0f}MiB vs "
+          f"{belt.stats.bytes_uncompressed/2**20:.0f}MiB uncompressed "
+          f"({belt.stats.bytes_uncompressed/max(belt.stats.bytes_shipped,1):.1f}x saved)")
+    drift = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(belt.params[0]),
+                                jax.tree.leaves(belt.params[1])))
+    print(f"replica drift after drain: {drift:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .registry import (  # noqa: F401
+    ARCHS,
+    SHAPES,
+    all_cells,
+    get_arch,
+    get_shape,
+    shape_applicable,
+)

@@ -1,0 +1,16 @@
+"""gemma2-9b [dense]: 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000 — local(4096)+global alternating, logit softcaps, post-norms,
+GeGLU.  [arXiv:2408.00118; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="gemma2-9b", family="dense", n_layers=42, d_model=3584,
+        n_heads=16, n_kv_heads=8, d_ff=14336, vocab=256000,
+        head_dim=256, act="gelu", window=4096, alt_window=True,
+        attn_softcap=50.0, final_softcap=30.0, post_norms=True,
+        tie_embeddings=True, rope_theta=1e4, tp=16, fsdp=True, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

@@ -1,0 +1,16 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, 384 experts top-8 — trillion-param MoE (paper-table config).
+Expert hidden dims TP-sharded over `model`, expert weights FSDP-sharded over
+(pod, data) — mandatory to fit 16 GB/chip.  [arXiv:2501.kimi2; unverified]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="kimi-k2-1t-a32b", family="moe", n_layers=61, d_model=7168,
+        n_heads=64, n_kv_heads=8, d_ff=2048, vocab=163840,
+        n_experts=384, top_k=8, rope_theta=5e4,
+        tp=16, fsdp=True, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

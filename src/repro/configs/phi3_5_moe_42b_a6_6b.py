@@ -1,0 +1,15 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) expert
+d_ff=6400 vocab=32064, 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="phi3.5-moe-42b-a6.6b", family="moe", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_ff=6400, vocab=32064,
+        n_experts=16, top_k=2, rope_theta=1e4,
+        tp=16, fsdp=True, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

@@ -1,0 +1,16 @@
+"""qwen2-vl-2b [vlm]: 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936 — M-RoPE (t/h/w sections 16/24/24 of the 64-wide half-dim),
+dynamic-resolution vision frontend is a STUB (input_specs supplies patch
+embeddings + a (3,B,S) position grid).  [arXiv:2409.12191; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="qwen2-vl-2b", family="vlm", n_layers=28, d_model=1536,
+        n_heads=12, n_kv_heads=2, d_ff=8960, vocab=151936, head_dim=128,
+        mrope_sections=(16, 24, 24), rope_theta=1e6, tie_embeddings=True,
+        qkv_bias=True, tp=16, fsdp=False, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

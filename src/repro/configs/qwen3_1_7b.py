@@ -1,0 +1,14 @@
+"""qwen3-1.7b [dense]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="qwen3-1.7b", family="dense", n_layers=28, d_model=2048,
+        n_heads=16, n_kv_heads=8, d_ff=6144, vocab=151936,
+        qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+        tp=16, fsdp=True, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

@@ -1,0 +1,75 @@
+"""Architecture + input-shape registry (the assigned 10 × 4 grid).
+
+Shapes (per the assignment):
+  train_4k     seq 4,096   global_batch 256  → train_step
+  prefill_32k  seq 32,768  global_batch 32   → serve_prefill
+  decode_32k   seq 32,768  global_batch 128  → serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1    → serve_step; SSM/hybrid only
+                (full-attention archs are skipped — DESIGN.md §4; gemma2's
+                alternating stack still contains full global-attn layers,
+                so it is skipped too)
+Encoder-decoder (whisper) has a decoder, so decode shapes run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCHS = (
+    "qwen3-1.7b",
+    "phi3-medium-14b",
+    "gemma2-9b",
+    "qwen1.5-0.5b",
+    "zamba2-7b",
+    "rwkv6-7b",
+    "kimi-k2-1t-a32b",
+    "phi3.5-moe-42b-a6.6b",
+    "qwen2-vl-2b",
+    "whisper-base",
+)
+
+# Sub-quadratic decode state: the only archs that run long_500k.
+LONG_CONTEXT_OK = {"zamba2-7b", "rwkv6-7b"}
+
+
+def get_arch(arch_id: str, **overrides):
+    """Load ``src/repro/configs/<arch>.py`` and build its ModelConfig."""
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}"
+    )
+    return mod.config(**overrides)
+
+
+def get_shape(name: str) -> Shape:
+    return SHAPES[name]
+
+
+def shape_applicable(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    if shape_name == "long_500k" and arch_id not in LONG_CONTEXT_OK:
+        return False, "full-attention arch: 500k decode needs sub-quadratic state"
+    return True, ""
+
+
+def all_cells():
+    """The 40 assigned (arch × shape) cells with skip annotations."""
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = shape_applicable(arch, shape)
+            yield arch, shape, ok, why

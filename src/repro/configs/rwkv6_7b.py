@@ -1,0 +1,14 @@
+"""rwkv6-7b [ssm]: 32L d_model=4096 (attn-free) d_ff=14336 vocab=65536 —
+Finch: WKV6 with data-dependent decay; O(1) decode state.
+[arXiv:2404.05892; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="rwkv6-7b", family="ssm", n_layers=32, d_model=4096,
+        n_heads=64, n_kv_heads=64, d_ff=14336, vocab=65536,
+        tp=16, fsdp=True, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

@@ -1,0 +1,14 @@
+"""whisper-base [audio]: 6+6L enc-dec d_model=512 8H d_ff=2048 vocab=51865 —
+conv/mel frontend is a STUB (input_specs supplies 1500 precomputed frame
+embeddings).  [arXiv:2212.04356; unverified]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="whisper-base", family="audio", n_layers=6, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=2048, vocab=51865,
+        tp=16, fsdp=False, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

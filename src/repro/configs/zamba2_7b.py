@@ -1,0 +1,16 @@
+"""zamba2-7b [hybrid]: 81 blocks d_model=3584 32H (kv=32) d_ff=14336
+vocab=32000 ssm_state=64 — Mamba2 backbone + shared (weight-tied) attention
+block every 6th position: 13 groups × (5 mamba + 1 shared attn) + 3 tail
+mamba = 81 blocks.  [arXiv:2411.15242; unverified]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    base = dict(
+        name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584,
+        n_heads=32, n_kv_heads=32, d_ff=14336, vocab=32000,
+        ssm_state=64, attn_every=5, rope_theta=1e4,
+        tp=16, fsdp=True, remat="full",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

@@ -1,0 +1,16 @@
+"""Operation Partitioning + Conveyor Belt (Saissi et al. 2018) — core.
+
+Public surface:
+  state:      Database, TableSchema, DbState
+  rwsets:     Transaction, extract_rwsets, execute_txn
+  partition:  optimize_partitioning (Algorithm 1), detect_conflicts
+  classify:   classify, Classification, OpClass
+  conveyor:   Engine, EngineSpec, VirtualBelt (+ spmd deployment in spmd.py)
+  serial:     run_workload, check_serializable, total_order
+"""
+from .classify import Classification, OpClass, classify  # noqa: F401
+from .conveyor import Batch, Engine, EngineSpec, VirtualBelt  # noqa: F401
+from .partition import detect_conflicts, optimize_partitioning  # noqa: F401
+from .rwsets import Transaction, execute_txn, extract_rwsets  # noqa: F401
+from .serial import check_serializable, run_workload, total_order  # noqa: F401
+from .state import Database, DbState, TableSchema  # noqa: F401

@@ -1,0 +1,125 @@
+"""Operation classification (paper §3.2): commutative / local / global, plus
+the runtime dual-key class used by RUBiS ("local/global" column of Table 1).
+
+Definitions implemented verbatim:
+  * commutative — no conflicts with any operation at all (immutable reads,
+    never-read log writes);
+  * local — partitioned; (i) no write-write conflict crosses partitions and
+    (ii) no remote operation reads from it.  A local op MAY read from remote
+    (global) operations — their updates are replicated by the belt;
+  * global — everything else; still assigned to a partition (it may read
+    local state only the owner has);
+  * dual — has a secondary partitioning parameter covering all residual
+    clauses: the concrete operation is local iff all its partitioning
+    parameters route to the same server, global otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from .partition import (
+    Conflict,
+    find_dual_keys,
+    optimize_partitioning,
+    residual_clauses,
+)
+from .rwsets import RWSets, Transaction, extract_rwsets
+
+COMMUTATIVE, LOCAL, GLOBAL, DUAL = "C", "L", "G", "LG"
+
+
+@dataclasses.dataclass(frozen=True)
+class OpClass:
+    cls: str
+    primary: str | None  # partitioning parameter (index into txn params)
+    secondary: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Classification:
+    """Output of the full offline analysis; input to the Conveyor Belt."""
+
+    P: Mapping[str, str | None]
+    classes: Mapping[str, OpClass]
+    conflicts: Sequence[Conflict]
+    cost: float
+
+    def counts(self) -> dict:
+        out = {COMMUTATIVE: 0, LOCAL: 0, GLOBAL: 0, DUAL: 0}
+        for oc in self.classes.values():
+            out[oc.cls] += 1
+        return out
+
+
+def _violates_locality(name: str, cf: Conflict, P) -> bool:
+    """True if some residual clause of `cf` breaks conditions (i)/(ii) for
+    transaction `name` (cross-partition ww, or remote reader of our writes).
+    Reading from a remote writer does NOT break our locality."""
+    for c in residual_clauses(cf, P):
+        if c.kind == "ww":
+            return True
+        # 'rf': cf.t reads from cf.t2  → breaks locality of the WRITER cf.t2
+        # 'fr': cf.t2 reads from cf.t  → breaks locality of the WRITER cf.t
+        writer = cf.t2 if c.kind == "rf" else cf.t
+        if writer == name:
+            return True
+    return False
+
+
+def classify(db, txns: Sequence[Transaction]) -> Classification:
+    """Full offline pipeline: extract rw-sets → Algorithm 1 → classes."""
+    rwsets: dict[str, RWSets] = {t.name: extract_rwsets(db, t) for t in txns}
+    P, conflicts, best_cost = optimize_partitioning(db, txns, rwsets)
+    secondary = find_dual_keys(txns, rwsets, conflicts, P)
+
+    classes: dict[str, OpClass] = {}
+    for t in txns:
+        n = t.name
+        involved = [cf for cf in conflicts if n in (cf.t, cf.t2)]
+        if not involved:
+            classes[n] = OpClass(COMMUTATIVE, None)
+            continue
+        if not any(_violates_locality(n, cf, P) for cf in involved):
+            classes[n] = OpClass(LOCAL, P.get(n))
+            continue
+        if secondary.get(n) is not None:
+            classes[n] = OpClass(DUAL, P.get(n), secondary[n])
+            continue
+        classes[n] = OpClass(GLOBAL, P.get(n))
+    return Classification(P, classes, conflicts, best_cost)
+
+
+# ---------------------------------------------------------------------------
+# Routing (paper: "the same deterministic routing function for all
+# operations").  Works on concrete parameter values (python ints or arrays).
+# ---------------------------------------------------------------------------
+
+
+def route(value, n_servers: int):
+    return value % n_servers
+
+
+def op_partition(
+    txn: Transaction, oc: OpClass, params: Mapping[str, int], n_servers: int
+):
+    """(server, is_global) for a concrete operation.
+
+    Commutative ops may run anywhere (we route by a cheap hash for load
+    balance).  Dual ops are local iff all partitioning params co-route.
+    """
+    if oc.cls == COMMUTATIVE:
+        h = 0
+        for p in txn.params:
+            h = (h * 1000003 + int(params[p])) & 0x7FFFFFFF
+        return h % n_servers, False
+    if oc.primary is None:
+        return 0, oc.cls != LOCAL
+    server = route(int(params[oc.primary]), n_servers)
+    if oc.cls == LOCAL:
+        return server, False
+    if oc.cls == DUAL:
+        assert oc.secondary is not None
+        server2 = route(int(params[oc.secondary]), n_servers)
+        return server, server != server2
+    return server, True  # GLOBAL

@@ -1,0 +1,422 @@
+"""The Conveyor Belt protocol (paper §4, Algorithm 2) in JAX.
+
+Execution model
+---------------
+Time is divided into *rounds*.  In every round each server (a) executes the
+commutative / local operations of its incoming batch immediately and buffers
+global operations into its bounded queue Q (Algorithm 2 lines 1–9), and (b)
+the single token holder applies remote state updates carried by the token,
+removes its own (everyone has seen them), atomically snapshots its queue,
+executes the snapshot as a batch, appends the resulting state updates, and
+passes the token (lines 10–22).  The token advances one hop per round.
+
+Two interchangeable realizations share the per-server phase functions below:
+
+* ``VirtualBelt`` — single-device, explicit leading server axis, token hop is
+  an index rotation.  Used by unit/property tests and the serializability
+  checker.
+* ``spmd.py`` — `jax.shard_map` over a mesh axis, token hop is
+  ``lax.ppermute`` (the only collective in the protocol — it is lock-free:
+  no server ever blocks another's local operations).
+
+State updates are full-row after-images (passive replication, paper §5), so
+``apply`` never re-executes remote operations.
+
+Order stamps: every executed op is stamped with (is_global, gseq-or-applied,
+server, seq) from which ``serial.py`` reconstructs the equivalent total order
+T of the correctness proof (global ops by token sequence number; local ops
+between the global updates they observed — the B_p^l / A_p^l sets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .classify import Classification, COMMUTATIVE, DUAL, GLOBAL, LOCAL
+from .rwsets import Transaction, execute_txn
+from .state import Database, DbState
+
+CLS_CODE = {COMMUTATIVE: 0, LOCAL: 1, GLOBAL: 2, DUAL: 3}
+
+
+class Queue(NamedTuple):
+    op_type: jax.Array  # (Q,) int32
+    params: jax.Array  # (Q, P) int32
+    op_id: jax.Array  # (Q,) int32
+    n: jax.Array  # () int32
+
+
+class Token(NamedTuple):
+    table: jax.Array  # (T,) int32
+    row: jax.Array  # (T,) int32
+    vals: jax.Array  # (T, A) int32
+    origin: jax.Array  # (T,) int32
+    gseq: jax.Array  # (T,) int32
+    valid: jax.Array  # (T,) bool
+    next_gseq: jax.Array  # () int32
+    overflow: jax.Array  # () bool — capacity violation flag (checked by tests)
+
+
+class Batch(NamedTuple):
+    """Ops routed to one server for one round (padded)."""
+
+    op_type: jax.Array  # (B,) int32
+    params: jax.Array  # (B, P) int32
+    op_id: jax.Array  # (B,) int32
+    valid: jax.Array  # (B,) bool
+
+
+class ExecRecord(NamedTuple):
+    """Per-op outputs for reply collection and order reconstruction."""
+
+    op_id: jax.Array
+    reply: jax.Array
+    is_global: jax.Array
+    order_key: jax.Array  # gseq for globals; applied_gseq at exec for locals
+    server: jax.Array
+    seq: jax.Array
+    valid: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    n_servers: int
+    batch: int = 8
+    queue_cap: int = 64
+    token_cap: int = 256
+    max_params: int = 4
+
+
+class Engine:
+    """Compiles an application (db schema + transactions + classification)
+    into jittable per-server phase functions."""
+
+    def __init__(
+        self,
+        db: Database,
+        txns: Sequence[Transaction],
+        classification: Classification,
+        spec: EngineSpec,
+    ):
+        self.db = db
+        self.txns = list(txns)
+        self.classification = classification
+        self.spec = spec
+        self.max_attrs = db.max_attrs
+        self.max_writes = max(t.max_writes for t in txns)
+
+        n = len(txns)
+        cls_code = np.zeros((n,), np.int32)
+        prim_idx = np.full((n,), -1, np.int32)
+        sec_idx = np.full((n,), -1, np.int32)
+        for i, t in enumerate(txns):
+            oc = classification.classes[t.name]
+            cls_code[i] = CLS_CODE[oc.cls]
+            if oc.primary is not None:
+                prim_idx[i] = t.params.index(oc.primary)
+            if oc.secondary is not None:
+                sec_idx[i] = t.params.index(oc.secondary)
+        self.cls_code = jnp.asarray(cls_code)
+        self.prim_idx = jnp.asarray(prim_idx)
+        self.sec_idx = jnp.asarray(sec_idx)
+        self._np_cls = cls_code
+        self._np_prim = prim_idx
+        self._np_sec = sec_idx
+
+    # -- routing (deterministic, shared by host driver and jitted code) -----
+    def route_np(self, op_type: int, params: np.ndarray) -> tuple[int, bool]:
+        n = self.spec.n_servers
+        cls = int(self._np_cls[op_type])
+        pi = int(self._np_prim[op_type])
+        if cls == 0:  # commutative: load-balance hash (uint32 wraparound,
+            # identical in route_jax)
+            h = (int(params.astype(np.int64).sum()) * 1000003) & 0xFFFFFFFF
+            return h % n, False
+        server = int(params[pi]) % n if pi >= 0 else 0
+        if cls == 1:
+            return server, False
+        if cls == 3:
+            si = int(self._np_sec[op_type])
+            s2 = int(params[si]) % n
+            return server, server != s2
+        return server, True
+
+    def route_jax(self, op_type, params):
+        n = self.spec.n_servers
+        cls = self.cls_code[op_type]
+        pi = self.prim_idx[op_type]
+        prim = jnp.where(pi >= 0, params[jnp.maximum(pi, 0)], 0)
+        comm_server = (
+            (params.astype(jnp.uint32).sum() * jnp.uint32(1000003)) % jnp.uint32(n)
+        ).astype(jnp.int32)
+        server = jnp.where(cls == 0, comm_server, prim.astype(jnp.int32) % n)
+        si = self.sec_idx[op_type]
+        sec = jnp.where(si >= 0, params[jnp.maximum(si, 0)], 0).astype(jnp.int32) % n
+        is_global = jnp.where(
+            cls == 2, True, jnp.where(cls == 3, server != sec, False)
+        )
+        return server, is_global
+
+    # -- single-op execution via lax.switch ---------------------------------
+    def exec_op(self, state: DbState, op_type, params):
+        """(state', reply, updates) — updates padded to max_writes records of
+        (table_id, row, vals[max_attrs], valid)."""
+
+        def make_branch(txn: Transaction):
+            def branch(state_params):
+                state, params = state_params
+                p = {name: params[i] for i, name in enumerate(txn.params)}
+                new_state, reply, ups = execute_txn(self.db, state, txn, p)
+                tb = jnp.full((self.max_writes,), -1, jnp.int32)
+                rw = jnp.zeros((self.max_writes,), jnp.int32)
+                vl = jnp.zeros((self.max_writes, self.max_attrs), jnp.int32)
+                ok = jnp.zeros((self.max_writes,), bool)
+                for j, (tid, row, vals) in enumerate(ups[: self.max_writes]):
+                    tb = tb.at[j].set(tid)
+                    rw = rw.at[j].set(row)
+                    vl = vl.at[j, : vals.shape[0]].set(vals)
+                    ok = ok.at[j].set(True)
+                return new_state, reply, (tb, rw, vl, ok)
+
+            return branch
+
+        return jax.lax.switch(
+            op_type, [make_branch(t) for t in self.txns], (state, params)
+        )
+
+    # -- Phase A: immediate execution of commutative/local ops --------------
+    def phase_a(self, state: DbState, queue: Queue, applied_gseq, batch: Batch,
+                server_idx):
+        """One server, one round: Algorithm 2 lines 1–9 over the batch."""
+
+        def step(carry, slot):
+            state, queue = carry
+            op_type, params, op_id, valid = slot
+            _, is_global = self.route_jax(op_type, params)
+            run_now = valid & ~is_global
+            new_state, reply, _ = self.exec_op(state, op_type, params)
+            state = new_state.select(run_now, state)
+            # enqueue global ops (bounded queue; overflow drops + flags)
+            enq = valid & is_global
+            pos = jnp.minimum(queue.n, self.spec.queue_cap - 1)
+            queue = Queue(
+                op_type=jnp.where(
+                    enq, queue.op_type.at[pos].set(op_type), queue.op_type
+                ),
+                params=jnp.where(
+                    enq, queue.params.at[pos].set(params), queue.params
+                ),
+                op_id=jnp.where(enq, queue.op_id.at[pos].set(op_id), queue.op_id),
+                n=queue.n + jnp.where(enq, 1, 0),
+            )
+            rec = ExecRecord(
+                op_id=op_id,
+                reply=jnp.where(run_now, reply, 0),
+                is_global=jnp.zeros((), bool),
+                order_key=applied_gseq,
+                server=jnp.asarray(server_idx, jnp.int32),
+                seq=jnp.zeros((), jnp.int32),
+                valid=run_now,
+            )
+            return (state, queue), rec
+
+        (state, queue), recs = jax.lax.scan(
+            step, (state, queue), (batch.op_type, batch.params, batch.op_id,
+                                   batch.valid)
+        )
+        recs = recs._replace(seq=jnp.arange(self.spec.batch, dtype=jnp.int32))
+        return state, queue, recs
+
+    # -- Phase B: token receipt (Algorithm 2 lines 10–22) -------------------
+    def phase_b(self, state: DbState, queue: Queue, token: Token, server_idx):
+        sid = jnp.asarray(server_idx, jnp.int32)
+
+        # 1. apply remote updates; remove own (all servers have seen them).
+        def apply_step(st, rec):
+            tb, row, vals, origin, gq, valid = rec
+            do = valid & (origin != sid)
+            new = st
+            for t_i, schema in enumerate(self.db.tables):
+                hit = do & (tb == t_i)
+                nvals = vals[: len(schema.attrs)]
+                upd = DbState(
+                    {
+                        **st.arrays,
+                        schema.name: st.arrays[schema.name]
+                        .at[row % schema.capacity]
+                        .set(nvals),
+                    }
+                )
+                new = upd.select(hit, new)
+            applied = jnp.where(do, gq, -1)
+            return new, applied
+
+        state, applied_gqs = jax.lax.scan(
+            apply_step,
+            state,
+            (token.table, token.row, token.vals, token.origin, token.gseq,
+             token.valid),
+        )
+        keep = token.valid & (token.origin != sid)
+
+        # 2. compact surviving records to the front (stable), then execute the
+        #    queue snapshot and append new after-images.
+        order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)
+        tok = Token(
+            table=token.table[order],
+            row=token.row[order],
+            vals=token.vals[order],
+            origin=token.origin[order],
+            gseq=token.gseq[order],
+            valid=keep[order],
+            next_gseq=token.next_gseq,
+            overflow=token.overflow,
+        )
+        n_kept = keep.sum(dtype=jnp.int32)
+
+        def exec_step(carry, slot):
+            state, tok, n_slots, n_exec = carry
+            op_type, params, op_id = slot
+            do = n_exec < queue.n
+            new_state, reply, (tb, rw, vl, ok) = self.exec_op(
+                state, op_type, params
+            )
+            state = new_state.select(do, state)
+            gq = tok.next_gseq
+            table_a, row_a, vals_a = tok.table, tok.row, tok.vals
+            origin_a, gseq_a, valid_a = tok.origin, tok.gseq, tok.valid
+            overflow = tok.overflow
+            for j in range(self.max_writes):
+                put = do & ok[j]
+                pos = jnp.minimum(n_slots, self.spec.token_cap - 1)
+                overflow = overflow | (put & (n_slots >= self.spec.token_cap))
+                table_a = jnp.where(put, table_a.at[pos].set(tb[j]), table_a)
+                row_a = jnp.where(put, row_a.at[pos].set(rw[j]), row_a)
+                vals_a = jnp.where(put, vals_a.at[pos].set(vl[j]), vals_a)
+                origin_a = jnp.where(put, origin_a.at[pos].set(sid), origin_a)
+                gseq_a = jnp.where(put, gseq_a.at[pos].set(gq), gseq_a)
+                valid_a = jnp.where(put, valid_a.at[pos].set(True), valid_a)
+                n_slots = n_slots + jnp.where(put, 1, 0)
+            tok = Token(table_a, row_a, vals_a, origin_a, gseq_a, valid_a,
+                        gq + jnp.where(do, 1, 0), overflow)
+            rec = ExecRecord(
+                op_id=op_id,
+                reply=jnp.where(do, reply, 0),
+                is_global=jnp.ones((), bool),
+                order_key=gq,
+                server=sid,
+                seq=jnp.zeros((), jnp.int32),
+                valid=do,
+            )
+            return (state, tok, n_slots, n_exec + jnp.where(do, 1, 0)), rec
+
+        (state, tok, _, _), recs = jax.lax.scan(
+            exec_step,
+            (state, tok, n_kept, jnp.zeros((), jnp.int32)),
+            (queue.op_type, queue.params, queue.op_id),
+        )
+        queue = Queue(
+            op_type=queue.op_type,
+            params=queue.params,
+            op_id=queue.op_id,
+            n=jnp.zeros((), jnp.int32),
+        )
+        new_applied = jnp.maximum(applied_gqs.max(), tok.next_gseq - 1)
+        return state, queue, tok, recs, new_applied
+
+    # -- empties -------------------------------------------------------------
+    def empty_queue(self) -> Queue:
+        s = self.spec
+        return Queue(
+            op_type=jnp.zeros((s.queue_cap,), jnp.int32),
+            params=jnp.zeros((s.queue_cap, s.max_params), jnp.int32),
+            op_id=jnp.full((s.queue_cap,), -1, jnp.int32),
+            n=jnp.zeros((), jnp.int32),
+        )
+
+    def empty_token(self) -> Token:
+        s = self.spec
+        return Token(
+            table=jnp.full((s.token_cap,), -1, jnp.int32),
+            row=jnp.zeros((s.token_cap,), jnp.int32),
+            vals=jnp.zeros((s.token_cap, self.max_attrs), jnp.int32),
+            origin=jnp.full((s.token_cap,), -1, jnp.int32),
+            gseq=jnp.full((s.token_cap,), -1, jnp.int32),
+            valid=jnp.zeros((s.token_cap,), bool),
+            next_gseq=jnp.zeros((), jnp.int32),
+            overflow=jnp.zeros((), bool),
+        )
+
+
+class VirtualBelt:
+    """Single-device belt: all N servers simulated with a leading axis.
+
+    Semantically identical to the SPMD deployment (tests assert this); the
+    token hop is an index rotation instead of a ppermute.
+    """
+
+    def __init__(self, engine: Engine, init_state: DbState):
+        self.engine = engine
+        n = engine.spec.n_servers
+        self.dbs = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), init_state
+        )
+        self.queues = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), engine.empty_queue()
+        )
+        self.token = engine.empty_token()
+        # highest global seq whose update is reflected locally; -1 = none
+        self.applied = jnp.full((n,), -1, jnp.int32)
+        self.round = 0
+        self._step = jax.jit(self._round_fn)
+
+    def _round_fn(self, dbs, queues, token, applied, round_idx, batches: Batch):
+        eng = self.engine
+        n = eng.spec.n_servers
+        sidx = jnp.arange(n, dtype=jnp.int32)
+
+        dbs, queues, a_recs = jax.vmap(
+            lambda db, q, ag, b, s: eng.phase_a(db, q, ag, b, s)
+        )(dbs, queues, applied, batches, sidx)
+
+        holder = jnp.asarray(round_idx % n, jnp.int32)
+        tok_bcast = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                                 token)
+        db_b, q_b, tok_b, b_recs, new_applied = jax.vmap(
+            lambda db, q, t, s: eng.phase_b(db, q, t, s)
+        )(dbs, queues, tok_bcast, sidx)
+
+        is_h = sidx == holder
+        dbs = jax.tree.map(
+            lambda new, old: jnp.where(
+                is_h.reshape((n,) + (1,) * (new.ndim - 1)), new, old
+            ),
+            db_b,
+            dbs,
+        )
+        queues = jax.tree.map(
+            lambda new, old: jnp.where(
+                is_h.reshape((n,) + (1,) * (new.ndim - 1)), new, old
+            ),
+            q_b,
+            queues,
+        )
+        token = jax.tree.map(lambda a: a[holder], tok_b)
+        applied = jnp.where(is_h, jnp.maximum(new_applied, applied), applied)
+        b_recs = jax.tree.map(lambda a: a[holder], b_recs)
+        return dbs, queues, token, applied, a_recs, b_recs
+
+    def run_round(self, batches: Batch):
+        (self.dbs, self.queues, self.token, self.applied, a_recs, b_recs) = (
+            self._step(self.dbs, self.queues, self.token, self.applied,
+                       self.round, batches)
+        )
+        self.round += 1
+        return jax.device_get(a_recs), jax.device_get(b_recs)
+
+    def server_state(self, p: int) -> DbState:
+        return jax.tree.map(lambda a: a[p], self.dbs)

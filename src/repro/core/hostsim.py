@@ -1,0 +1,306 @@
+"""Discrete-event simulator for the paper's evaluation (§7).
+
+The in-JAX belt proves semantics; timing behaviour at cluster scale (LAN /
+WAN, token circulation, 2PC lock blocking) is a host-level concern — the
+paper itself measures a middleware, so we reproduce its experiments with a
+calibrated event simulator:
+
+* ``conveyor``   — Eliá: local/commutative ops execute at their server with
+                   no coordination; global ops wait for the token; the token
+                   hop costs one inter-server latency; queued globals execute
+                   as a parallel batch (paper §5 "Parallelizing the execution
+                   of global operations").
+* ``twopc``      — MySQL-Cluster analogue: single-partition ops run locally;
+                   distributed transactions lock every involved partition for
+                   2 round trips (prepare + commit) plus execution, blocking
+                   conflicting work (read-only ops don't lock — read
+                   committed, the paper's note on RUBiS).
+* ``central``    — one server takes everything (WAN baseline 1).
+* ``readonly``   — read-only ops served locally, writes forwarded to a
+                   primary (WAN baseline 2, paper's "read-only" setting).
+
+Closed-loop clients (paper: "we intensify the workload by increasing the
+number of clients"); peak throughput = max sustained rate with mean latency
+under the paper's 2000 ms bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+# Paper Table 2 (ms): sites G, J, US, B, A; symmetric; intra-site 20.
+SITES = ("G", "J", "US", "B", "A")
+WAN_MS = np.array(
+    [
+        [20, 253, 92, 193, 314],
+        [253, 20, 153, 282, 188],
+        [92, 153, 20, 145, 229],
+        [193, 282, 145, 20, 322],
+        [314, 188, 229, 322, 20],
+    ],
+    dtype=float,
+)
+LAN_MS = np.full((5, 5), 0.5) + np.eye(5) * 0.0  # same-DC fabric
+INTRA_MS = 20.0  # paper: intra-site latency ~20 ms (client ↔ server)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOp:
+    is_global: bool
+    home: int  # owning server
+    read_only: bool
+    partitions: tuple  # partitions touched (for 2PC locking)
+
+
+@dataclasses.dataclass
+class SimResult:
+    throughput: float  # ops / s
+    mean_latency_ms: float
+    p99_latency_ms: float
+    n_done: int
+    mean_local_ms: float = 0.0
+    mean_global_ms: float = 0.0
+
+
+def latency(n_servers: int, wan: bool) -> np.ndarray:
+    """Inter-server one-way latency matrix for n servers placed on the
+    paper's sites round-robin (WAN) or inside one DC (LAN)."""
+    base = WAN_MS if wan else LAN_MS
+    site = [i % 5 for i in range(n_servers)]
+    out = np.zeros((n_servers, n_servers))
+    for i in range(n_servers):
+        for j in range(n_servers):
+            out[i, j] = base[site[i], site[j]] if i != j else 0.0
+    return out
+
+
+def client_latency(n_servers: int, wan: bool, client_site: int, server: int):
+    if not wan:
+        return INTRA_MS / 2
+    s_site = server % 5
+    return (INTRA_MS / 2) if s_site == client_site else WAN_MS[client_site, s_site] / 2
+
+
+class _EventSim:
+    """Shared machinery: closed-loop clients + per-server processor pool."""
+
+    def __init__(self, n_servers, n_clients, exec_ms, wan, seed, server_slots=8):
+        self.n = n_servers
+        self.exec_ms = exec_ms
+        self.wan = wan
+        self.rng = np.random.default_rng(seed)
+        self.lat = latency(n_servers, wan)
+        self.events: list = []
+        self.counter = itertools.count()
+        self.now = 0.0
+        self.latencies: list[float] = []
+        self.local_lat: list[float] = []
+        self.global_lat: list[float] = []
+        self.n_clients = n_clients
+        self.client_site = [i % 5 for i in range(n_clients)]
+        self.server_free = np.zeros((n_servers, server_slots))
+
+    def push(self, t, kind, payload):
+        heapq.heappush(self.events, (t, next(self.counter), kind, payload))
+
+    def service(self, server: int, t: float, dur: float) -> float:
+        """Acquire the earliest-free processor slot; returns completion."""
+        slots = self.server_free[server]
+        k = int(np.argmin(slots))
+        start = max(t, slots[k])
+        slots[k] = start + dur
+        return start + dur
+
+    def done(self, client, issue_t, t, is_global):
+        lat = t - issue_t
+        self.latencies.append(lat)
+        (self.global_lat if is_global else self.local_lat).append(lat)
+
+    def result(self, duration_ms) -> SimResult:
+        lat = np.array(self.latencies) if self.latencies else np.array([0.0])
+        return SimResult(
+            throughput=len(self.latencies) / (duration_ms / 1000.0),
+            mean_latency_ms=float(lat.mean()),
+            p99_latency_ms=float(np.percentile(lat, 99)),
+            n_done=len(self.latencies),
+            mean_local_ms=float(np.mean(self.local_lat)) if self.local_lat else 0.0,
+            mean_global_ms=float(np.mean(self.global_lat)) if self.global_lat else 0.0,
+        )
+
+
+def simulate(
+    protocol: str,
+    op_source: Callable[[np.random.Generator], SimOp],
+    n_servers: int,
+    n_clients: int,
+    duration_ms: float = 60_000.0,
+    exec_ms: float = 5.0,
+    wan: bool = False,
+    seed: int = 0,
+    token_batch_overhead_ms: float = 0.5,
+) -> SimResult:
+    sim = _EventSim(n_servers, n_clients, exec_ms, wan, seed)
+    rng = sim.rng
+
+    # protocol-specific shared state
+    global_q: list[list] = [[] for _ in range(n_servers)]  # conveyor queues
+    lock_until = np.zeros(n_servers)  # 2PC partition locks
+
+    def nearest_server(client):
+        site = sim.client_site[client]
+        cands = [s for s in range(n_servers) if s % 5 == site % 5]
+        if cands:
+            return cands[client % len(cands)]
+        return int(np.argmin([WAN_MS[site % 5, s % 5]
+                              for s in range(n_servers)]))
+
+    def issue(client, t):
+        op = op_source(rng)
+        if n_servers == 1:
+            op = dataclasses.replace(op, is_global=False, home=0,
+                                     partitions=(0,))
+        elif wan and not op.is_global and protocol in ("conveyor", "twopc"):
+            # Paper §6: Eliá generates server-specific unique ids so a
+            # client's partitioned data lives at its closest server — local
+            # ops are site-affine in the WAN experiments.
+            home = nearest_server(client)
+            op = dataclasses.replace(
+                op, home=home,
+                partitions=(home,) + tuple(p for p in op.partitions
+                                           if p != op.home)[: 0],
+            )
+        if protocol == "central":
+            server = 0
+        elif protocol == "readonly":
+            server = nearest_server(client) if op.read_only else 0
+        else:
+            server = op.home
+        c_lat = client_latency(n_servers, sim.wan, sim.client_site[client], server)
+        sim.push(t + c_lat, "arrive", (client, t, op, server))
+
+    def reply(client, issue_t, t, op, server):
+        c_lat = client_latency(n_servers, sim.wan, sim.client_site[client], server)
+        sim.push(t + c_lat, "reply", (client, issue_t, op))
+
+    for c in range(n_clients):
+        issue(c, rng.uniform(0, 5.0))
+
+    if protocol == "conveyor":
+        sim.push(0.0, "token", 0)
+
+    while sim.events:
+        t, _, kind, payload = heapq.heappop(sim.events)
+        if t > duration_ms:
+            break
+        sim.now = t
+        if kind == "arrive":
+            client, issue_t, op, server = payload
+            if protocol == "conveyor" and op.is_global:
+                global_q[server].append((client, issue_t, op))
+            elif protocol == "twopc" and (not op.read_only) and len(op.partitions) > 1:
+                # distributed transaction: lock all involved partitions for
+                # 2 round trips + execution (pessimistic 2PC).
+                rtt = 2 * max(sim.lat[server, p] for p in op.partitions)
+                start = max(t, max(lock_until[p] for p in op.partitions))
+                fin = start + 2 * rtt + exec_ms
+                for p in op.partitions:
+                    lock_until[p] = fin
+                reply(client, issue_t, fin, op, server)
+            else:
+                if protocol == "twopc" and not op.read_only:
+                    # single-partition write waits for partition lock
+                    start = max(t, lock_until[op.partitions[0]])
+                    fin = sim.service(server, start, exec_ms)
+                else:
+                    fin = sim.service(server, t, exec_ms)
+                reply(client, issue_t, fin, op, server)
+        elif kind == "token":
+            holder = payload
+            # batch-execute queued globals in parallel (paper §5)
+            q, global_q[holder] = global_q[holder], []
+            fin = t
+            if q:
+                fin = t + exec_ms + token_batch_overhead_ms * len(q)
+                for client, issue_t, op in q:
+                    reply(client, issue_t, fin, op, holder)
+            nxt = (holder + 1) % n_servers
+            sim.push(fin + max(sim.lat[holder, nxt], 0.25), "token", nxt)
+        elif kind == "reply":
+            client, issue_t, op = payload
+            sim.done(client, issue_t, t, op.is_global)
+            issue(client, t)
+
+    return sim.result(duration_ms)
+
+
+def peak_throughput(
+    protocol: str,
+    op_source,
+    n_servers: int,
+    wan: bool = False,
+    exec_ms: float = 5.0,
+    latency_bound_ms: float = 2000.0,
+    client_grid: Sequence[int] = (4, 8, 16, 32, 64, 128, 256, 512),
+    duration_ms: float = 30_000.0,
+    seed: int = 0,
+) -> tuple[float, SimResult]:
+    """Paper's metric: max throughput with mean latency < 2000 ms."""
+    best, best_res = 0.0, None
+    for nc in client_grid:
+        res = simulate(protocol, op_source, n_servers, nc, duration_ms,
+                       exec_ms, wan, seed)
+        if res.mean_latency_ms <= latency_bound_ms and res.throughput >= best:
+            best, best_res = res.throughput, res
+    if best_res is None:
+        best_res = simulate(protocol, op_source, n_servers, client_grid[0],
+                            duration_ms, exec_ms, wan, seed)
+        best = best_res.throughput
+    return best, best_res
+
+
+# --- bridging real classified workloads into the simulator -----------------
+
+
+def op_source_from_workload(
+    engine, concrete_ops: Sequence, n_servers: int, extra_partitions=1, seed=0
+):
+    """Precompute SimOps for a stream of concrete (txn, params) ops: each is
+    routed with the SAME deterministic routing as the JAX belt; 2PC partition
+    sets follow the paper's setup (the data partitioning induced by operation
+    partitioning).  The returned source cycles the pool randomly."""
+    from .rwsets import extract_rwsets
+
+    read_only = {}
+    for txn in engine.txns:
+        rw = extract_rwsets(engine.db, txn)
+        read_only[txn.name] = len(rw.writes) == 0
+    names = [t.name for t in engine.txns]
+    prep_rng = np.random.default_rng(seed)
+
+    pool = []
+    for name, params in concrete_ops:
+        ti = names.index(name)
+        txn = engine.txns[ti]
+        pv = np.zeros((engine.spec.max_params,), np.int32)
+        for i, pn in enumerate(txn.params):
+            pv[i] = params[pn]
+        home, is_global = engine.route_np(ti, pv)
+        if is_global and n_servers > 1:
+            others = [p for p in range(n_servers) if p != home]
+            k = min(extra_partitions, len(others))
+            parts = (home, *prep_rng.choice(others, size=k, replace=False))
+        else:
+            parts = (home,)
+        pool.append(
+            SimOp(bool(is_global), int(home), read_only[name],
+                  tuple(map(int, parts)))
+        )
+
+    def source(rng: np.random.Generator) -> SimOp:
+        return pool[int(rng.integers(len(pool)))]
+
+    return source

@@ -1,0 +1,233 @@
+"""Algorithm 1 of the paper: conflict detection + partitioning optimization.
+
+Faithful structure:
+  * conflict detection builds, for every transaction pair (t, t') including
+    t = t', a condition C_{t,t'} in DNF — one clause per pair of overlapping
+    read/write entries, each clause a conjunction of per-key-attribute atom
+    pairs ``(A = k_t) ∧ (A = k_{t'})``;
+  * the optimizer searches operation-partitioning arrays P (one partitioning
+    parameter per transaction) and removes every clause containing
+    ``(k = A ∧ k' = A ∧ ...)`` with k = P[t], k' = P[t'] — such conflicts
+    become partition-local under the shared deterministic routing function;
+  * cost(P) = Σ weight(t) + weight(t') over conflicts that stay satisfiable
+    (paper line 20); exhaustive search (feasible for OLTP-sized apps, as the
+    paper argues), with an optional beam fallback for very wide apps.
+
+Extensions kept from the paper's text: per-transaction frequency weights,
+self-conflicts, constants (two distinct constants on the same key attribute
+make a clause unsatisfiable), and the multi-parameter ("dual-key") scheme of
+§3.1/§6 used by RUBiS: a second parameter that covers all residual clauses of
+a transaction makes it local-iff-co-routed at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Mapping, Sequence
+
+from .rwsets import Binding, Entry, RWSets, Transaction
+
+# clause kinds: 'ww' write/write, 'rf' (t reads from t'), 'fr' (t' reads from t)
+KINDS = ("ww", "rf", "fr")
+
+
+@dataclasses.dataclass(frozen=True)
+class Clause:
+    table: str
+    # per key attribute of `table`: (key_attr, binding_t, binding_t2)
+    atoms: tuple
+    kind: str
+
+    def satisfiable(self) -> bool:
+        for _, b1, b2 in self.atoms:
+            if (
+                b1 is not None
+                and b2 is not None
+                and b1[0] == "const"
+                and b2[0] == "const"
+                and b1[1] != b2[1]
+            ):
+                return False
+        return True
+
+    def eliminated_by(self, k_t: str | None, k_t2: str | None) -> bool:
+        """True iff the clause contains (k = A ∧ k' = A) for the chosen
+        partitioning parameters — co-routing makes the conflict local."""
+        if k_t is None or k_t2 is None:
+            return False
+        for _, b1, b2 in self.atoms:
+            if b1 == ("param", k_t) and b2 == ("param", k_t2):
+                return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Conflict:
+    t: str
+    t2: str
+    clauses: tuple  # of Clause
+
+
+def _clause(table_keys: Sequence[str], table: str, e1: Entry, e2: Entry, kind: str):
+    b1 = e1.bindings_for(table)
+    b2 = e2.bindings_for(table)
+    atoms = tuple((ka, b1.get(ka), b2.get(ka)) for ka in table_keys)
+    return Clause(table, atoms, kind)
+
+
+def detect_conflicts(
+    db, txns: Sequence[Transaction], rwsets: Mapping[str, RWSets]
+) -> list[Conflict]:
+    """Phase 1 of Algorithm 1 (lines 1–10)."""
+    conflicts = []
+    names = [t.name for t in txns]
+    for i, t in enumerate(txns):
+        for t2 in txns[i:]:
+            clauses = []
+            r1, w1 = rwsets[t.name].reads, rwsets[t.name].writes
+            r2, w2 = rwsets[t2.name].reads, rwsets[t2.name].writes
+            for ea, eb, kind in itertools.chain(
+                ((a, b, "rf") for a in r1 for b in w2),
+                ((a, b, "fr") for a in w1 for b in r2),
+                ((a, b, "ww") for a in w1 for b in w2),
+            ):
+                shared = {tb for tb, _ in ea.attrs} & {tb for tb, _ in eb.attrs}
+                overlap = ea.attrs & eb.attrs
+                if not overlap:
+                    continue
+                for table in sorted({tb for tb, _ in overlap}):
+                    schema = db.table(table)
+                    if schema.immutable or schema.write_only:
+                        # Immutable reads / never-read log writes cannot
+                        # conflict (paper's commutative examples).
+                        continue
+                    cl = _clause(schema.key_attrs, table, ea, eb, kind)
+                    if cl.satisfiable():
+                        clauses.append(cl)
+                del shared
+            if clauses:
+                conflicts.append(Conflict(t.name, t2.name, tuple(clauses)))
+    del names
+    return conflicts
+
+
+def residual_clauses(conflict: Conflict, P: Mapping[str, str | None]) -> list:
+    k_t, k_t2 = P.get(conflict.t), P.get(conflict.t2)
+    return [c for c in conflict.clauses if not c.eliminated_by(k_t, k_t2)]
+
+
+def cost(
+    P: Mapping[str, str | None],
+    conflicts: Sequence[Conflict],
+    weights: Mapping[str, float],
+) -> float:
+    """Paper Algorithm 1, function cost (lines 12–20)."""
+    total = 0.0
+    for cf in conflicts:
+        if residual_clauses(cf, P):
+            total += weights[cf.t] + weights[cf.t2]
+    return total
+
+
+def candidate_params(txn: Transaction, rw: RWSets) -> list[str | None]:
+    """Parameters usable for partitioning: those appearing in equality atoms
+    (paper: "potential partitioning parameters are involved in WHERE clauses
+    only in atomic conditions in an equality form")."""
+    cands = []
+    for e in tuple(rw.reads) + tuple(rw.writes):
+        for atom in e.cond:
+            if atom.binding is not None and atom.binding[0] == "param":
+                name = atom.binding[1]
+                if name not in cands:
+                    cands.append(name)
+    return cands + [None]
+
+
+def optimize_partitioning(
+    db,
+    txns: Sequence[Transaction],
+    rwsets: Mapping[str, RWSets],
+    max_exhaustive: int = 2_000_000,
+) -> tuple[dict, list[Conflict], float]:
+    """Phase 2 of Algorithm 1 (line 11): argmin_P cost(P, Conflicts).
+
+    Exhaustive over the product of candidate parameters; greedy
+    coordinate-descent fallback when the space exceeds ``max_exhaustive``
+    (the paper notes "more sophisticated search strategies" are possible).
+    """
+    conflicts = detect_conflicts(db, txns, rwsets)
+    weights = {t.name: t.weight for t in txns}
+    cand = {t.name: candidate_params(t, rwsets[t.name]) for t in txns}
+    names = [t.name for t in txns]
+
+    space = 1
+    for n in names:
+        space *= len(cand[n])
+
+    if space <= max_exhaustive:
+        best, best_cost = None, float("inf")
+        for combo in itertools.product(*(cand[n] for n in names)):
+            P = dict(zip(names, combo))
+            c = cost(P, conflicts, weights)
+            if c < best_cost:
+                best, best_cost = P, c
+        assert best is not None
+        return best, conflicts, best_cost
+
+    # Greedy coordinate descent from the first-parameter heuristic.
+    P = {n: cand[n][0] for n in names}
+    improved = True
+    while improved:
+        improved = False
+        for n in names:
+            cur = cost(P, conflicts, weights)
+            for k in cand[n]:
+                trial = dict(P, **{n: k})
+                if cost(trial, conflicts, weights) < cur:
+                    P, cur, improved = trial, cost(trial, conflicts, weights), True
+    return P, conflicts, cost(P, conflicts, weights)
+
+
+def find_dual_keys(
+    txns: Sequence[Transaction],
+    rwsets: Mapping[str, RWSets],
+    conflicts: Sequence[Conflict],
+    P: Mapping[str, str | None],
+) -> dict:
+    """Multi-parameter post-pass (paper §3.1 "Multiple partitioning
+    parameters", §6 RUBiS double-key scheme): a transaction with residual
+    clauses gets a secondary parameter if routing by it would eliminate every
+    residual clause — at runtime the operation is local iff both parameters
+    route to the same server, global otherwise."""
+    secondary: dict[str, str | None] = {}
+    for t in txns:
+        n = t.name
+        residual = []
+        for cf in conflicts:
+            if n in (cf.t, cf.t2):
+                residual.extend(
+                    (cf, c) for c in residual_clauses(cf, P)
+                )
+        if not residual:
+            secondary[n] = None
+            continue
+        found = None
+        for k2 in candidate_params(t, rwsets[n])[:-1]:
+            if k2 == P.get(n):
+                continue
+            ok = True
+            for cf, c in residual:
+                if cf.t == cf.t2 == n:
+                    k_left, k_right = k2, k2
+                elif cf.t == n:
+                    k_left, k_right = k2, P.get(cf.t2)
+                else:
+                    k_left, k_right = P.get(cf.t), k2
+                if not c.eliminated_by(k_left, k_right):
+                    ok = False
+                    break
+            if ok:
+                found = k2
+                break
+        secondary[n] = found
+    return secondary

@@ -1,0 +1,219 @@
+"""Static read/write-set extraction (paper §3.1, "Extracting read/write sets").
+
+The paper parses SQL inside transaction bodies.  Our transactions are Python
+functions written against a ``TxView`` effect API; static analysis runs the
+body once under a ``TraceView`` whose reads return opaque symbolic values and
+whose effects are recorded as ⟨accessed-attributes, condition⟩ entries —
+exactly the paper's pessimistic, path-insensitive extraction ("all SQL
+statements ... regardless of the execution path").
+
+A condition is a conjunction of atoms ``table.key_attr = binding`` where the
+binding is a transaction input parameter, a constant, or ⊥ (value-dependent
+addressing, e.g. a key obtained from a previous read — conservatively matches
+any row, as in the paper's static over-approximation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+
+from .state import Database, DbState, TableSchema
+
+# A binding is ("param", name) | ("const", value) | None (unbound / ⊥).
+Binding = tuple | None
+
+
+@dataclasses.dataclass(frozen=True)
+class Atom:
+    table: str
+    key_attr: str
+    binding: Binding
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    """One ⟨A, C⟩ read- or write-set entry (paper §3.1)."""
+
+    attrs: frozenset  # of (table, attr)
+    cond: tuple  # of Atom
+
+    def bindings_for(self, table: str) -> dict:
+        return {a.key_attr: a.binding for a in self.cond if a.table == table}
+
+
+@dataclasses.dataclass(frozen=True)
+class RWSets:
+    reads: tuple  # of Entry
+    writes: tuple  # of Entry
+
+
+@dataclasses.dataclass(frozen=True)
+class Transaction:
+    """A stored-procedure-style transaction (paper §3: "transactions are
+    procedures having a certain number of input parameters")."""
+
+    name: str
+    params: tuple[str, ...]
+    body: Callable  # body(view, p: dict[str, value]) -> reply (int-like) | None
+    weight: float = 1.0
+    # Upper bound on rows written in one execution (sizes the update records
+    # shipped on the token; checked at trace time).
+    max_writes: int = 4
+
+
+class SymValue:
+    """Opaque value flowing out of symbolic reads; supports arithmetic so the
+    same transaction body runs under trace and execution."""
+
+    __slots__ = ()
+
+    def _op(self, *_):
+        return SymValue()
+
+    __add__ = __radd__ = __sub__ = __rsub__ = __mul__ = __rmul__ = _op
+    __neg__ = __mod__ = __floordiv__ = _op
+    __lt__ = __le__ = __gt__ = __ge__ = _op
+
+    def __eq__(self, other):  # type: ignore[override]
+        return SymValue()
+
+    def __hash__(self):
+        return 0
+
+
+def _binding_of(x) -> Binding:
+    if isinstance(x, _ParamRef):
+        return ("param", x.name)
+    if isinstance(x, (int, bool)):
+        return ("const", int(x))
+    return None  # SymValue / traced value → unbound
+
+
+@dataclasses.dataclass(frozen=True)
+class _ParamRef:
+    name: str
+
+    # Parameters may be combined arithmetically; the result is no longer a
+    # pure parameter binding (conservative ⊥), but remains usable as a value.
+    def _op(self, *_):
+        return SymValue()
+
+    __add__ = __radd__ = __sub__ = __rsub__ = __mul__ = __rmul__ = _op
+    __neg__ = __mod__ = __floordiv__ = _op
+
+
+class TxView:
+    """Interface shared by TraceView (static analysis) and ExecView."""
+
+    def read(self, table: str, attr: str, key: Sequence) -> Any:
+        raise NotImplementedError
+
+    def write(self, table: str, attr: str, key: Sequence, value) -> None:
+        raise NotImplementedError
+
+    def add(self, table: str, attr: str, key: Sequence, value) -> None:
+        raise NotImplementedError
+
+    def where(self, cond, a, b):
+        raise NotImplementedError
+
+
+class TraceView(TxView):
+    def __init__(self, db: Database):
+        self.db = db
+        self.reads: list[Entry] = []
+        self.writes: list[Entry] = []
+        self.n_writes = 0
+
+    def _cond(self, schema: TableSchema, key: Sequence) -> tuple:
+        assert len(key) == len(schema.key_attrs), (schema.name, key)
+        return tuple(
+            Atom(schema.name, ka, _binding_of(k))
+            for ka, k in zip(schema.key_attrs, key)
+        )
+
+    def read(self, table, attr, key):
+        schema = self.db.table(table)
+        self.reads.append(
+            Entry(frozenset({(table, attr)}), self._cond(schema, key))
+        )
+        return SymValue()
+
+    def write(self, table, attr, key, value):
+        schema = self.db.table(table)
+        self.writes.append(
+            Entry(frozenset({(table, attr)}), self._cond(schema, key))
+        )
+        self.n_writes += 1
+
+    def add(self, table, attr, key, value):
+        # read-modify-write: contributes to both sets (paper: UPDATE with
+        # arithmetic reads the old value).
+        schema = self.db.table(table)
+        cond = self._cond(schema, key)
+        self.reads.append(Entry(frozenset({(table, attr)}), cond))
+        self.writes.append(Entry(frozenset({(table, attr)}), cond))
+        self.n_writes += 1
+
+    def where(self, cond, a, b):
+        return SymValue()
+
+
+def extract_rwsets(db: Database, txn: Transaction) -> RWSets:
+    view = TraceView(db)
+    params = {p: _ParamRef(p) for p in txn.params}
+    txn.body(view, params)
+    assert view.n_writes <= txn.max_writes, (
+        f"{txn.name}: traced {view.n_writes} writes > max_writes={txn.max_writes}"
+    )
+    return RWSets(tuple(view.reads), tuple(view.writes))
+
+
+# ---------------------------------------------------------------------------
+# Concrete execution + passive-replication update recording (paper §5,
+# "Extracting state updates": the after-image of every mutated row).
+# ---------------------------------------------------------------------------
+
+
+class ExecView(TxView):
+    """Executes a transaction body against a DbState, recording full-row
+    after-images of every write — the paper's "state update" u."""
+
+    def __init__(self, db: Database, state: DbState):
+        self.db = db
+        self.state = state
+        self.updates: list[tuple[int, Any, Any]] = []  # (table_id, row, row_vals)
+
+    def _record(self, table: str, key):
+        schema = self.db.table(table)
+        row = schema.flat_key(key)
+        self.updates.append(
+            (self.db.table_id(table), row, self.state.read_row(schema, key))
+        )
+
+    def read(self, table, attr, key):
+        return self.state.read(self.db.table(table), attr, key)
+
+    def write(self, table, attr, key, value):
+        self.state = self.state.write(self.db.table(table), attr, key, value)
+        self._record(table, key)
+
+    def add(self, table, attr, key, value):
+        self.state = self.state.add(self.db.table(table), attr, key, value)
+        self._record(table, key)
+
+    def where(self, cond, a, b):
+        return jnp.where(cond, a, b)
+
+
+def execute_txn(
+    db: Database, state: DbState, txn: Transaction, params: dict
+) -> tuple[DbState, Any, list]:
+    """Run one transaction; returns (new_state, reply, update_records)."""
+    view = ExecView(db, state)
+    reply = txn.body(view, params)
+    if reply is None:
+        reply = jnp.int32(0)
+    return view.state, jnp.asarray(reply, jnp.int32), view.updates

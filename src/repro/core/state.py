@@ -1,0 +1,158 @@
+"""Dense JAX state store: the "DBMS" each Conveyor Belt server owns.
+
+The paper's servers each run an unmodified single-server DBMS.  Our TPU-native
+analogue is a pytree of dense tables resident in a replica group's HBM.  Rows
+are addressed by integer primary keys (multi-attribute keys are flattened with
+a mixed radix), values are int32 so that serializability checks are exact.
+
+A ``Database`` is immutable metadata; ``DbState`` is the JAX pytree of arrays.
+All mutation goes through pure functions returning new states, so the store
+composes with jit / scan / shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSchema:
+    """Schema for one table.
+
+    attrs: value columns (int32 each).
+    key_attrs: primary-key attribute names (integer domains).
+    key_card: cardinality of each key attribute (rows live in a dense
+        ``prod(key_card)`` address space — the OLTP analogue of a hash index
+        with a perfect hash).
+    immutable: never written after init (⇒ reads of it are conflict-free).
+    write_only: written but never read (⇒ log-like, conflict-free writes).
+    """
+
+    name: str
+    attrs: tuple[str, ...]
+    key_attrs: tuple[str, ...]
+    key_card: tuple[int, ...]
+    immutable: bool = False
+    write_only: bool = False
+
+    @property
+    def capacity(self) -> int:
+        out = 1
+        for c in self.key_card:
+            out *= int(c)
+        return out
+
+    def attr_index(self, attr: str) -> int:
+        return self.attrs.index(attr)
+
+    def flat_key(self, key: Sequence) -> jax.Array:
+        """Mixed-radix flattening of a (possibly traced) composite key."""
+        assert len(key) == len(self.key_card), (self.name, key)
+        flat = None
+        for k, card in zip(key, self.key_card):
+            k = jnp.asarray(k, jnp.int32) % jnp.int32(card)
+            flat = k if flat is None else flat * jnp.int32(card) + k
+        return jnp.asarray(flat, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Database:
+    tables: tuple[TableSchema, ...]
+
+    def __post_init__(self):
+        names = [t.name for t in self.tables]
+        assert len(set(names)) == len(names), "duplicate table names"
+
+    def table(self, name: str) -> TableSchema:
+        for t in self.tables:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    def table_id(self, name: str) -> int:
+        for i, t in enumerate(self.tables):
+            if t.name == name:
+                return i
+        raise KeyError(name)
+
+    # -- state construction ------------------------------------------------
+    def init_state(self, init: Mapping[str, np.ndarray] | None = None) -> "DbState":
+        arrays = {}
+        for t in self.tables:
+            if init is not None and t.name in init:
+                a = np.asarray(init[t.name], np.int32)
+                assert a.shape == (t.capacity, len(t.attrs)), (t.name, a.shape)
+                arrays[t.name] = jnp.asarray(a)
+            else:
+                arrays[t.name] = jnp.zeros((t.capacity, len(t.attrs)), jnp.int32)
+        return DbState(arrays)
+
+    # Max row capacity / attr count across tables: used for homogeneous
+    # update-record encoding on the token.
+    @property
+    def max_attrs(self) -> int:
+        return max(len(t.attrs) for t in self.tables)
+
+
+@jax.tree_util.register_pytree_node_class
+class DbState:
+    """Pytree of per-table (capacity, n_attrs) int32 arrays."""
+
+    def __init__(self, arrays: Mapping[str, jax.Array]):
+        self.arrays = dict(arrays)
+
+    def tree_flatten(self):
+        keys = sorted(self.arrays)
+        return [self.arrays[k] for k in keys], tuple(keys)
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        return cls(dict(zip(keys, children)))
+
+    # -- pure accessors ----------------------------------------------------
+    def read(self, schema: TableSchema, attr: str, key: Sequence) -> jax.Array:
+        row = schema.flat_key(key)
+        return self.arrays[schema.name][row, schema.attr_index(attr)]
+
+    def read_row(self, schema: TableSchema, key: Sequence) -> jax.Array:
+        return self.arrays[schema.name][schema.flat_key(key)]
+
+    def write(self, schema: TableSchema, attr: str, key: Sequence, value) -> "DbState":
+        row = schema.flat_key(key)
+        col = schema.attr_index(attr)
+        arrays = dict(self.arrays)
+        arrays[schema.name] = arrays[schema.name].at[row, col].set(
+            jnp.asarray(value, jnp.int32)
+        )
+        return DbState(arrays)
+
+    def add(self, schema: TableSchema, attr: str, key: Sequence, value) -> "DbState":
+        row = schema.flat_key(key)
+        col = schema.attr_index(attr)
+        arrays = dict(self.arrays)
+        arrays[schema.name] = arrays[schema.name].at[row, col].add(
+            jnp.asarray(value, jnp.int32)
+        )
+        return DbState(arrays)
+
+    def write_row(self, schema: TableSchema, key: Sequence, values) -> "DbState":
+        row = schema.flat_key(key)
+        arrays = dict(self.arrays)
+        vals = jnp.asarray(values, jnp.int32)
+        arrays[schema.name] = arrays[schema.name].at[row].set(vals)
+        return DbState(arrays)
+
+    def select(self, pred, other: "DbState") -> "DbState":
+        """Row-wise jnp.where over two states (same schema)."""
+        arrays = {
+            k: jnp.where(pred, self.arrays[k], other.arrays[k]) for k in self.arrays
+        }
+        return DbState(arrays)
+
+
+def states_equal(a: DbState, b: DbState) -> bool:
+    return all(bool(jnp.array_equal(a.arrays[k], b.arrays[k])) for k in a.arrays)

@@ -1,0 +1,1 @@
+from . import micro, rubis, tpcw  # noqa: F401

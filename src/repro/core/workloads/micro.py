@@ -1,0 +1,56 @@
+"""Synthetic micro-benchmark workload (paper §7.3, Figs. 5–6): a single
+table; ``localOp(k)`` is perfectly partitionable by k, ``globalOp`` writes a
+shared row.  The local-ratio parameter reproduces the paper's sweep."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..rwsets import Transaction
+from ..state import Database, TableSchema
+
+N_ROWS = 256
+
+
+def make_db() -> Database:
+    return Database(
+        tables=(
+            TableSchema("KV", ("val",), ("k",), (N_ROWS,)),
+            TableSchema("SHARED", ("val",), ("k",), (8,)),
+        )
+    )
+
+
+def local_op(v, p):
+    v.add("KV", "val", (p["k"],), p["d"])
+    return v.read("KV", "val", (p["k"],))
+
+
+def global_op(v, p):
+    # second write via a derived key (⊥ atom) keeps this op global under any
+    # partitioning — the paper's fixed global fraction.
+    v.add("SHARED", "val", (p["g"],), p["d"])
+    v.add("SHARED", "val", ((p["g"] + 1) % 8,), p["d"])
+    return v.read("SHARED", "val", (p["g"],))
+
+
+TXNS = (
+    Transaction("localOp", ("k", "d"), local_op, weight=1, max_writes=1),
+    Transaction("globalOp", ("g", "d"), global_op, weight=1, max_writes=2),
+)
+
+
+def sample_ops(n: int, local_ratio: float, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n):
+        if rng.random() < local_ratio:
+            ops.append(
+                ("localOp", {"k": int(rng.integers(N_ROWS)),
+                             "d": int(rng.integers(1, 10))})
+            )
+        else:
+            ops.append(
+                ("globalOp", {"g": int(rng.integers(8)),
+                              "d": int(rng.integers(1, 10))})
+            )
+    return ops

@@ -1,0 +1,124 @@
+"""RUBiS analogue (paper §6): auction site with the paper's double-key
+scheme — storeBid/buyNow are partitioned by BOTH user id and item id and are
+local iff both route to the same server (Table 1 "L/G" class)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..rwsets import Transaction
+from ..state import Database, TableSchema
+
+N_USERS, N_ITEMS = 64, 64
+
+
+def make_db() -> Database:
+    return Database(
+        tables=(
+            TableSchema("USERS", ("rating", "balance"), ("u_id",), (N_USERS,)),
+            TableSchema(
+                "AUCTIONS", ("max_bid", "n_bids", "seller"), ("i_id",), (N_ITEMS,)
+            ),
+            TableSchema("BIDS", ("amount",), ("u_id", "i_id"), (N_USERS, N_ITEMS)),
+            TableSchema(
+                "CATEGORIES", ("name_id",), ("cat_id",), (16,), immutable=True
+            ),
+            TableSchema("VIEW_LOG", ("hits",), ("slot",), (32,), write_only=True),
+        )
+    )
+
+
+def view_profile(v, p):
+    return v.read("USERS", "rating", (p["uid"],))
+
+
+def update_rating(v, p):
+    v.add("USERS", "rating", (p["uid"],), p["delta"])
+    return 0
+
+
+def sell_item(v, p):
+    v.write("AUCTIONS", "seller", (p["iid"],), p["uid"])
+    v.write("AUCTIONS", "n_bids", (p["iid"],), 0)
+    return 0
+
+
+def store_bid(v, p):
+    """Dual-key (uid, iid): reads/writes the auction row AND the bidder row."""
+    cur = v.read("AUCTIONS", "max_bid", (p["iid"],))
+    new = v.where(p["amt"] > cur, p["amt"], cur)
+    v.write("AUCTIONS", "max_bid", (p["iid"],), new)
+    v.add("AUCTIONS", "n_bids", (p["iid"],), 1)
+    v.write("BIDS", "amount", (p["uid"], p["iid"]), p["amt"])
+    v.add("USERS", "balance", (p["uid"],), -p["amt"])
+    return new
+
+
+def search_items(v, p):
+    # global catalogue scan over seller listings (written by sellItem, which
+    # therefore replicates — paper: "a global search for items").
+    s = 0
+    for i in range(4):
+        s = s + v.read("AUCTIONS", "seller", (i,))
+    return s
+
+
+def view_user_bids(v, p):
+    """Paper's "browsing through a user's own bought items"."""
+    s = 0
+    for i in range(3):
+        s = s + v.read("BIDS", "amount", (p["uid"], i))
+    return s
+
+
+def browse_categories(v, p):
+    return v.read("CATEGORIES", "name_id", (p["cat"],))
+
+
+def log_view(v, p):
+    v.add("VIEW_LOG", "hits", (p["slot"],), 1)
+    return 0
+
+
+TXNS = (
+    Transaction("viewProfile", ("uid",), view_profile, weight=20),
+    Transaction("updateRating", ("uid", "delta"), update_rating, weight=5,
+                max_writes=1),
+    Transaction("sellItem", ("uid", "iid"), sell_item, weight=5, max_writes=2),
+    Transaction("storeBid", ("uid", "iid", "amt"), store_bid, weight=8,
+                max_writes=4),
+    Transaction("searchItems", (), search_items, weight=4),
+    Transaction("viewUserBids", ("uid",), view_user_bids, weight=6),
+    Transaction("browseCategories", ("cat",), browse_categories, weight=10),
+    Transaction("logView", ("slot",), log_view, weight=5, max_writes=1),
+)
+
+
+def init_arrays() -> dict:
+    cats = (np.arange(16, dtype=np.int32) + 500).reshape(16, 1)
+    return {"CATEGORIES": cats}
+
+
+def sample_ops(n: int, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    w = np.array([t.weight for t in TXNS], float)
+    w /= w.sum()
+    ops = []
+    for _ in range(n):
+        name = str(rng.choice([t.name for t in TXNS], p=w))
+        if name in ("viewProfile", "updateRating", "viewUserBids"):
+            p = {"uid": int(rng.integers(N_USERS))}
+            if name == "updateRating":
+                p["delta"] = int(rng.integers(1, 5))
+        elif name == "sellItem":
+            p = {"uid": int(rng.integers(N_USERS)), "iid": int(rng.integers(N_ITEMS))}
+        elif name == "storeBid":
+            p = {"uid": int(rng.integers(N_USERS)), "iid": int(rng.integers(N_ITEMS)),
+                 "amt": int(rng.integers(1, 100))}
+        elif name == "browseCategories":
+            p = {"cat": int(rng.integers(16))}
+        elif name == "logView":
+            p = {"slot": int(rng.integers(32))}
+        else:
+            p = {}
+        ops.append((name, p))
+    return ops

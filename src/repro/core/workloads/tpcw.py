@@ -1,0 +1,212 @@
+"""TPC-W analogue (paper §6): online bookstore as a state machine over the
+dense store.  Transaction mix mirrors the paper's shopping mix structure:
+local ops partitioned by cart/customer id, global ops touching shared stock,
+commutative ops on immutable/log tables.  Algorithm 1 classifies the 16
+transactions 9 L / 3 G / 4 C — the paper's Table 1 structure (10/5/5 of
+20) — incl. the worked createCart/doCart example of §3.1."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..rwsets import Transaction
+from ..state import Database, TableSchema
+
+N_CUST, N_ITEMS, N_CARTS, MAX_LINE = 64, 32, 64, 8
+
+
+def make_db() -> Database:
+    return Database(
+        tables=(
+            TableSchema("CUSTOMERS", ("balance", "ltd_spend"), ("c_id",), (N_CUST,)),
+            TableSchema("ITEMS", ("stock", "price", "sold"), ("i_id",), (N_ITEMS,)),
+            TableSchema("CARTS", ("total", "n_items", "owner"), ("sc_id",), (N_CARTS,)),
+            TableSchema(
+                "CART_LINES", ("qty",), ("sc_id", "i_id"), (N_CARTS, N_ITEMS)
+            ),
+            TableSchema("ORDERS", ("customer", "total", "status"), ("o_id",), (N_CARTS,)),
+            TableSchema(
+                "STATIC", ("content",), ("page_id",), (16,), immutable=True
+            ),
+            TableSchema("CLICK_LOG", ("hits",), ("slot",), (32,), write_only=True),
+        )
+    )
+
+
+# --- transactions (paper §3.1 running example uses createCart/doCart) -------
+
+def create_cart(v, p):
+    v.write("CARTS", "owner", (p["sid"],), p["cid"])
+    v.write("CARTS", "n_items", (p["sid"],), 0)
+    return p["sid"]
+
+
+def do_cart(v, p):
+    """UPDATE SHOPPING_CARTS SET QTY = q WHERE ID = sid AND I_ID = iid."""
+    stock = v.read("ITEMS", "stock", (p["iid"],))  # reads-from order (remote ok)
+    q = v.where(stock >= p["q"], p["q"], 0)
+    v.write("CART_LINES", "qty", (p["sid"], p["iid"]), q)
+    v.add("CARTS", "n_items", (p["sid"],), 1)
+    return q
+
+
+def get_cart(v, p):
+    return v.read("CARTS", "n_items", (p["sid"],))
+
+
+def update_customer(v, p):
+    v.add("CUSTOMERS", "balance", (p["cid"],), p["delta"])
+    return 0
+
+
+def get_customer(v, p):
+    return v.read("CUSTOMERS", "balance", (p["cid"],))
+
+
+def do_buy_confirm(v, p):
+    """Global: drains the cart into an order, decrementing shared stock
+    (write-write with every other order on the same items)."""
+    total = 0
+    for i in range(2):  # bounded cart scan (static unrolling)
+        iid = (p["sid"] + i) % N_ITEMS  # derived key → unbound atom (⊥)
+        qty = v.read("CART_LINES", "qty", (p["sid"], iid))
+        price = v.read("ITEMS", "price", (iid,))
+        v.add("ITEMS", "stock", (iid,), -qty)
+        v.add("ITEMS", "sold", (iid,), qty)
+        total = total + qty * price
+    v.write("ORDERS", "customer", (p["sid"],), p["cid"])
+    v.write("ORDERS", "total", (p["sid"],), total)
+    v.write("ORDERS", "status", (p["sid"],), 1)
+    return total
+
+
+def admin_update_item(v, p):
+    v.write("ITEMS", "price", (p["iid"],), p["price"])
+    return 0
+
+
+def get_best_sellers(v, p):
+    s = 0
+    for i in range(4):
+        s = s + v.read("ITEMS", "sold", (i,))
+    return s
+
+
+def get_static(v, p):
+    return v.read("STATIC", "content", (p["page"],))
+
+
+def log_click(v, p):
+    v.add("CLICK_LOG", "hits", (p["slot"],), 1)
+    return 0
+
+
+def get_orders(v, p):
+    """Customer order history — local by the order key (= cart id here)."""
+    return v.read("ORDERS", "status", (p["sid"],))
+
+
+def refresh_cart(v, p):
+    """Cart touch (paper: updating carts dominates the shopping mix)."""
+    v.add("CARTS", "total", (p["sid"],), p["delta"])
+    return v.read("CARTS", "total", (p["sid"],))
+
+
+def clear_cart_line(v, p):
+    v.write("CART_LINES", "qty", (p["sid"], p["iid"]), 0)
+    return 0
+
+
+def admin_restock(v, p):
+    """Admin restock: shared stock write → global (like adminUpdateItem)."""
+    v.add("ITEMS", "stock", (p["iid"],), p["qty"])
+    v.add("ITEMS", "stock", ((p["iid"] + 1) % N_ITEMS,), 0)
+    return 0
+
+
+def get_related(v, p):
+    """Static related-items page (immutable catalogue graph)."""
+    return v.read("STATIC", "content", ((p["page"] + 1) % 16,))
+
+
+def log_search(v, p):
+    v.add("CLICK_LOG", "hits", ((p["slot"] + 16) % 32,), 1)
+    return 0
+
+
+TXNS = (
+    Transaction("createCart", ("sid", "cid"), create_cart, weight=4, max_writes=2),
+    Transaction("doCart", ("sid", "iid", "q"), do_cart, weight=10, max_writes=2),
+    Transaction("getCart", ("sid",), get_cart, weight=12),
+    Transaction("updateCustomer", ("cid", "delta"), update_customer, weight=4,
+                max_writes=1),
+    Transaction("getCustomer", ("cid",), get_customer, weight=8),
+    Transaction("doBuyConfirm", ("sid", "cid"), do_buy_confirm, weight=6,
+                max_writes=7),
+    Transaction("adminUpdateItem", ("iid", "price"), admin_update_item, weight=1,
+                max_writes=1),
+    Transaction("getBestSellers", (), get_best_sellers, weight=3),
+    Transaction("getStatic", ("page",), get_static, weight=6),
+    Transaction("logClick", ("slot",), log_click, weight=4, max_writes=1),
+    Transaction("getOrders", ("sid",), get_orders, weight=4),
+    Transaction("refreshCart", ("sid", "delta"), refresh_cart, weight=6,
+                max_writes=1),
+    Transaction("clearCartLine", ("sid", "iid"), clear_cart_line, weight=2,
+                max_writes=1),
+    Transaction("adminRestock", ("iid", "qty"), admin_restock, weight=1,
+                max_writes=2),
+    Transaction("getRelated", ("page",), get_related, weight=3),
+    Transaction("logSearch", ("slot",), log_search, weight=2, max_writes=1),
+)
+
+
+def init_arrays() -> dict:
+    items = np.zeros((N_ITEMS, 3), np.int32)
+    items[:, 0] = 100  # stock
+    items[:, 1] = 1 + np.arange(N_ITEMS) % 7  # price
+    static = np.arange(16 * 1, dtype=np.int32).reshape(16, 1) + 1000
+    return {"ITEMS": items, "STATIC": static}
+
+
+def sample_ops(n: int, seed: int = 0) -> list:
+    """Shopping-mix-style stream (~30% writes, paper §7)."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    mix = [t.name for t in TXNS]
+    w = np.array([t.weight for t in TXNS], float)
+    w /= w.sum()
+    for _ in range(n):
+        name = rng.choice(mix, p=w)
+        p = {}
+        if name == "createCart":
+            p = {"sid": int(rng.integers(N_CARTS)), "cid": int(rng.integers(N_CUST))}
+        elif name == "doCart":
+            p = {"sid": int(rng.integers(N_CARTS)), "iid": int(rng.integers(N_ITEMS)),
+                 "q": int(rng.integers(1, 4))}
+        elif name == "getCart":
+            p = {"sid": int(rng.integers(N_CARTS))}
+        elif name == "updateCustomer":
+            p = {"cid": int(rng.integers(N_CUST)), "delta": int(rng.integers(1, 10))}
+        elif name == "getCustomer":
+            p = {"cid": int(rng.integers(N_CUST))}
+        elif name == "doBuyConfirm":
+            p = {"sid": int(rng.integers(N_CARTS)), "cid": int(rng.integers(N_CUST))}
+        elif name == "adminUpdateItem":
+            p = {"iid": int(rng.integers(N_ITEMS)), "price": int(rng.integers(1, 9))}
+        elif name == "getStatic":
+            p = {"page": int(rng.integers(16))}
+        elif name == "logClick":
+            p = {"slot": int(rng.integers(32))}
+        elif name == "getOrders":
+            p = {"sid": int(rng.integers(N_CARTS))}
+        elif name == "refreshCart":
+            p = {"sid": int(rng.integers(N_CARTS)), "delta": int(rng.integers(1, 5))}
+        elif name == "clearCartLine":
+            p = {"sid": int(rng.integers(N_CARTS)), "iid": int(rng.integers(N_ITEMS))}
+        elif name == "adminRestock":
+            p = {"iid": int(rng.integers(N_ITEMS)), "qty": int(rng.integers(1, 20))}
+        elif name == "getRelated":
+            p = {"page": int(rng.integers(16))}
+        elif name == "logSearch":
+            p = {"slot": int(rng.integers(32))}
+        ops.append((str(name), p))
+    return ops

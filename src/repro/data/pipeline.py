@@ -1,0 +1,72 @@
+"""Deterministic synthetic data pipeline.
+
+Tokens are a pure function of (stream seed, step, position) — a counter-mode
+hash — so any host can materialize exactly its shard without coordination,
+restarts are bit-exact from the step counter alone (no data-state in the
+checkpoint beyond ``step``), and elastic re-sharding is trivial: host h of H
+serves rows where ``row % H == h``.
+
+The target distribution is a learnable mixture (Zipf unigram + short-range
+copy structure) so a real training signal exists: loss decreases measurably
+within a few hundred steps on the quickstart config.
+
+Prefetch: a double-buffered iterator overlaps host batch synthesis with
+device compute (jax dispatch is async; we just stay one batch ahead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+def _hash64(x: np.ndarray) -> np.ndarray:
+    x = (x ^ (x >> 30)) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> 27)) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> 31)
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    copy_period: int = 64  # tokens repeat with this period → learnable
+
+    def batch(self, step: int, host: int = 0, n_hosts: int = 1) -> dict:
+        """Host-sharded batch: rows ``host::n_hosts`` of the global batch."""
+        rows = np.arange(self.global_batch, dtype=np.uint64)[host::n_hosts]
+        pos = np.arange(self.seq_len + 1, dtype=np.uint64)
+        key = (
+            np.uint64(self.seed) * np.uint64(1_000_003)
+            + np.uint64(step) * np.uint64(7_919)
+        )
+        base = _hash64(key + rows[:, None] * np.uint64(2_654_435_761))
+        # periodic copy structure: position p reuses the hash of p mod period
+        eff = pos % np.uint64(self.copy_period)
+        h = _hash64(base + eff[None, :] * np.uint64(0x9E3779B97F4A7C15))
+        # Zipf-ish unigram: square the uniform to skew toward low ids
+        u = (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+        toks = (u * u * self.vocab).astype(np.int32)
+        return {
+            "tokens": toks[:, : self.seq_len],
+            "labels": toks[:, 1:],
+        }
+
+
+def make_batch_iter(ds: SyntheticLM, start_step: int = 0, host: int = 0,
+                    n_hosts: int = 1, prefetch: int = 2) -> Iterator[dict]:
+    """Double-buffered iterator (synthesis overlaps device compute)."""
+    import collections
+
+    buf = collections.deque()
+    step = start_step
+    for _ in range(prefetch):
+        buf.append(ds.batch(step, host, n_hosts))
+        step += 1
+    while True:
+        yield buf.popleft()
+        buf.append(ds.batch(step, host, n_hosts))
+        step += 1

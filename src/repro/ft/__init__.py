@@ -1,0 +1,2 @@
+from .driver import FTConfig, TrainDriver  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401

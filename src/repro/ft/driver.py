@@ -1,0 +1,111 @@
+"""Fault-tolerant training driver.
+
+Wraps a compiled train step with: periodic (async) checkpointing, restart
+from the latest checkpoint (bit-exact: data pipeline is a pure function of
+the step counter), failure injection for tests, straggler monitoring, and an
+elastic-restart path (restore re-shards onto whatever mesh the new process
+has — see checkpointing.restore).
+
+This is the host-side control plane; the paper delegates per-server fault
+tolerance to exactly this kind of layer ("a Paxos group could implement the
+abstraction of a logical fault tolerant server", §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpointing import latest_step, restore, save
+from .straggler import StragglerMonitor
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    async_ckpt: bool = False
+    keep: int = 3
+    fail_at_step: int | None = None  # failure injection (tests)
+
+
+class TrainDriver:
+    def __init__(
+        self,
+        step_fn: Callable,  # (params, opt, batch) -> (params, opt, metrics)
+        batch_fn: Callable,  # step -> batch
+        params,
+        opt_state,
+        ft: FTConfig,
+        shardings=None,  # (param_sh, opt_sh) for elastic restore
+    ):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.ft = ft
+        self.shardings = shardings
+        self.step = 0
+        self.monitor = StragglerMonitor(n=1)
+        self.history: list[dict] = []
+        self._pending_ckpt = None
+
+    # -- recovery -------------------------------------------------------------
+    def maybe_resume(self) -> bool:
+        s = latest_step(self.ft.ckpt_dir)
+        if s is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        sh = (
+            {"params": self.shardings[0], "opt": self.shardings[1]}
+            if self.shardings
+            else None
+        )
+        out = restore(self.ft.ckpt_dir, s, tree, sh)
+        self.params, self.opt_state = out["params"], out["opt"]
+        self.step = s
+        return True
+
+    def _checkpoint(self):
+        if self._pending_ckpt is not None:
+            self._pending_ckpt.join()
+        self._pending_ckpt = save(
+            self.ft.ckpt_dir,
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            async_write=self.ft.async_ckpt,
+            keep=self.ft.keep,
+        )
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, n_steps: int) -> list[dict]:
+        end = self.step + n_steps
+        while self.step < end:
+            if self.ft.fail_at_step is not None and self.step == self.ft.fail_at_step:
+                self.ft.fail_at_step = None  # fail once
+                raise InjectedFailure(f"injected failure at step {self.step}")
+            t0 = time.time()
+            batch = self.batch_fn(self.step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt = time.time() - t0
+            self.monitor.observe(0, dt)
+            metrics.update(step=self.step, seconds=dt)
+            self.history.append(metrics)
+            self.step += 1
+            if self.step % self.ft.ckpt_every == 0:
+                self._checkpoint()
+        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        self._checkpoint()
+        if self._pending_ckpt is not None:
+            self._pending_ckpt.join()
+        return self.history

@@ -1,0 +1,56 @@
+"""Straggler detection + mitigation policy.
+
+Step (or token-hop) latencies per participant feed an EWMA; a participant
+whose latency exceeds ``threshold ×`` the fleet median is flagged.  Paired
+with the Conveyor Belt: the mitigation for a straggling *token holder* is to
+skip its execution turn for a rotation — the belt's design makes this safe
+(the skipped server's global ops simply wait one more rotation in its queue;
+local traffic everywhere is never blocked, which is the paper's core
+property).  For sync-DP the mitigation is the classic backup-step /
+checkpoint-evict decision, surfaced as an action for the driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n: int
+    alpha: float = 0.2
+    threshold: float = 2.0
+    warmup: int = 3
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n)
+        self.count = np.zeros(self.n, dtype=int)
+
+    def observe(self, participant: int, latency_s: float) -> None:
+        e = self.ewma[participant]
+        self.ewma[participant] = (
+            latency_s if self.count[participant] == 0
+            else (1 - self.alpha) * e + self.alpha * latency_s
+        )
+        self.count[participant] += 1
+
+    def stragglers(self) -> list[int]:
+        ready = self.count >= self.warmup
+        if ready.sum() < max(2, self.n // 2):
+            return []
+        med = float(np.median(self.ewma[ready]))
+        if med <= 0:
+            return []
+        return [
+            int(i)
+            for i in range(self.n)
+            if ready[i] and self.ewma[i] > self.threshold * med
+        ]
+
+    def plan(self) -> dict:
+        s = self.stragglers()
+        return {
+            "stragglers": s,
+            "action": "skip_token_turn" if s else "none",
+        }

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper with an ``interpret`` switch — True on CPU),
+and ref.py (pure-jnp oracle).  tests/test_kernels.py sweeps shapes/dtypes
+asserting allclose against the oracles.
+"""

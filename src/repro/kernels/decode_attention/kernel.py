@@ -1,0 +1,96 @@
+"""Flash-decode — Pallas TPU kernel for single-token GQA decode.
+
+One new token attends to a long KV cache.  Tiling: grid (B, Hkv, S/bk) with
+the kv-block axis innermost/sequential; all G = H/Hkv query heads of one kv
+head are processed together as a (G, hd) tile (GQA keeps the MXU busy:
+scores tile is (G, bk)).  Online softmax state (m, l, acc) in VMEM scratch;
+``kv_len`` (SMEM, scalar-prefetched) masks the valid prefix so only written
+cache slots contribute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale, bk, n_kv):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, kv_len, *, bk=256, interpret=False):
+    """q: (B, H, hd); k, v: (B, S, Hkv, hd); kv_len: (B,) → (B, H, hd)."""
+    B, H, hd = q.shape
+    _, S, Hkv, _ = k.shape
+    assert H % Hkv == 0
+    G = H // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0
+    n_kv = S // bk
+
+    qt = q.reshape(B, Hkv, G, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_dec_kernel, scale=hd ** -0.5, bk=bk, n_kv=n_kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki, *_: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki, *_: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qt, kt, vt)
+    return out.reshape(B, H, hd)

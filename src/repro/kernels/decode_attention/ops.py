@@ -1,0 +1,12 @@
+"""Jit'd wrapper for flash-decode (interpret on CPU, Mosaic on TPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention
+
+
+def decode_attention_op(q, k, v, kv_len, *, bk=256):
+    return decode_attention(
+        q, k, v, kv_len, bk=bk, interpret=jax.default_backend() == "cpu"
+    )

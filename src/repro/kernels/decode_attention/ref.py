@@ -1,0 +1,22 @@
+"""Oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, H, hd); k, v: (B, S, Hkv, hd); kv_len: (B,) valid prefix.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

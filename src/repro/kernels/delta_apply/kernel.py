@@ -1,0 +1,69 @@
+"""Conveyor Belt delta-apply — Pallas TPU kernel.
+
+Applies a batch of token state-update records (full-row after-images, paper
+§5 "passive replication") onto an HBM-resident table shard.  The table is
+tiled (bt rows × W) through VMEM via input↔output aliasing; record row-ids
+are scalar-prefetched (SMEM) so each grid step can decide membership without
+touching HBM.  Records are applied IN TOKEN ORDER within the tile (later
+records overwrite earlier — the serializable order of the belt).
+
+This is the hot loop of the protocol: every server applies every remote
+global update once per rotation; fusing the scatter through VMEM avoids
+read-modify-write round trips to HBM for hot rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _apply_kernel(rows_ref, valid_ref, table_ref, vals_ref, out_ref, *,
+                  bt, n_records):
+    ti = pl.program_id(0)
+    tile = table_ref[...]  # (bt, W)
+    lo = ti * bt
+
+    def body(i, tile):
+        row = rows_ref[i]
+        ok = valid_ref[i] != 0
+        in_tile = ok & (row >= lo) & (row < lo + bt)
+        local = jnp.where(in_tile, row - lo, 0)
+        new_row = jnp.where(in_tile, vals_ref[i].astype(tile.dtype),
+                            tile[local])
+        return tile.at[local].set(new_row)
+
+    tile = jax.lax.fori_loop(0, n_records, body, tile)
+    out_ref[...] = tile
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def delta_apply(table, rows, vals, valid, *, bt=256, interpret=False):
+    """table: (R, W) int32; rows: (K,) int32; vals: (K, W) int32;
+    valid: (K,) bool → updated table."""
+    R, W = table.shape
+    K = rows.shape[0]
+    bt = min(bt, R)
+    assert R % bt == 0
+    rows = (rows % R).astype(jnp.int32)
+
+    kernel = functools.partial(_apply_kernel, bt=bt, n_records=K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, W), lambda t, *_: (t, 0)),
+            pl.BlockSpec((K, W), lambda t, *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, W), lambda t, *_: (t, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, W), table.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(rows, valid.astype(jnp.int32), table, vals)

@@ -1,0 +1,11 @@
+"""Jit'd wrapper for delta-apply (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import delta_apply
+
+
+def delta_apply_op(table, rows, vals, valid, *, bt=256):
+    return delta_apply(table, rows, vals, valid, bt=bt,
+                       interpret=jax.default_backend() == "cpu")

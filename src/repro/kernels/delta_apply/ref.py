@@ -1,0 +1,14 @@
+"""Oracle for the Conveyor Belt delta-apply: sequential row scatter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delta_apply_ref(table, rows, vals, valid):
+    """table: (R, W); rows: (K,); vals: (K, W); valid: (K,) — later records
+    overwrite earlier ones (token order)."""
+    out = table
+    for i in range(rows.shape[0]):
+        new = out.at[rows[i] % table.shape[0]].set(vals[i])
+        out = jnp.where(valid[i], new, out)
+    return out

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On CPU hosts (this container) the kernel executes in interpret mode — the
+body is traced as jnp ops — while on TPU it lowers to Mosaic.  The wrapper
+picks interpret automatically from the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+
+
+def is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None, logit_cap=None,
+                       bq=128, bk=128):
+    return flash_attention(
+        q, k, v, causal=causal, window=window, logit_cap=logit_cap,
+        bq=bq, bk=bk, interpret=is_cpu(),
+    )

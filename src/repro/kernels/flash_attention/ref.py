@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (naive full-score materialization)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, logit_cap=None):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd) → (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= qp >= kp
+    if window is not None:
+        m &= (qp - kp) < window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,11 @@
+"""Jit'd wrapper for the SSD kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd
+
+
+def ssd_op(xh, dt, A_log, B, C, D, *, chunk=128):
+    return ssd(xh, dt, A_log, B, C, D, chunk=chunk,
+               interpret=jax.default_backend() == "cpu")

@@ -1,0 +1,9 @@
+"""Oracle for the Mamba2 SSD kernel: exact per-step recurrence."""
+from __future__ import annotations
+
+from repro.models.mamba2 import mamba2_ref_scan
+
+
+def ssd_ref(xh, dt, A_log, B, C, D):
+    """xh: (Bt,S,H,P); dt: (Bt,S,H); A_log,D: (H,); B,C: (Bt,S,N)."""
+    return mamba2_ref_scan(xh, dt, A_log, B, C, D)

@@ -1,0 +1,95 @@
+"""WKV6 (RWKV-6 "Finch") — Pallas TPU kernel.
+
+Grid (B, H, n_chunks), chunk axis sequential.  Within a chunk the recurrence
+uses the matmul form with log-space decay ratios:
+
+  y_t = (r_t ⊙ W_{t-1}) · S₀            (inter-chunk, MXU matmul)
+      + Σ_{j<t} [(r_t ⊙ W_{t-1}/W_j) · k_j] v_j   (intra, masked matmul)
+      + (r_t ⊙ u · k_t) v_t                       (bonus diagonal)
+
+with W_t = Π_{s≤t} w_s per channel.  Ratios W_{t-1}/W_j (j<t) are ≤ 1 so the
+exp stays stable; the per-pair exponent is evaluated inside the score einsum
+over the head dim (chunk=32 keeps the (Lc, Lc, hd) decay tensor in VMEM).
+State (hd, hd) f32 carried in scratch across chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (Lc, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)  # decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))  # (Lc, hd)
+    cum = jnp.cumsum(logw, axis=0)  # W_t = exp(cum_t)
+    cum_prev = cum - logw  # W_{t-1}
+
+    # inter-chunk: y_t += (r_t ⊙ W_{t-1}) @ S0
+    S0 = s_ref[...]  # (hd_k, hd_v)
+    rw = r * jnp.exp(cum_prev)
+    y = jax.lax.dot_general(rw, S0, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: scores_tj = Σ_d r_t[d] k_j[d] exp(cum_prev_t - cum_j)[d]
+    ratio = jnp.exp(cum_prev[:, None, :] - cum[None, :, :])  # (t, j, hd) ≤ 1
+    scores = jnp.einsum("td,jd,tjd->tj", r, k, ratio)
+    idx_t = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    idx_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(idx_t > idx_j, scores, 0.0)
+    # bonus diagonal
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (Lc,)
+    y += jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y += diag[:, None] * v
+
+    # state update: S = diag(W_L) S0 + Σ_j (W_L / W_j ⊙ k_j)ᵀ v_j
+    wl = jnp.exp(cum[-1])  # (hd,)
+    kd = k * jnp.exp(cum[-1][None, :] - cum)  # (Lc, hd), ratios ≤ 1
+    s_ref[...] = wl[:, None] * S0 + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk=32, interpret=False):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd) → y (B,S,H,hd)."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    tr = lambda t: t.transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(w), u)
+    return out.transpose(0, 2, 1, 3)

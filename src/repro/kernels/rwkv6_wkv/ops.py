@@ -1,0 +1,11 @@
+"""Jit'd wrapper for the WKV6 kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import wkv6
+
+
+def wkv6_op(r, k, v, w, u, *, chunk=32):
+    return wkv6(r, k, v, w, u, chunk=chunk,
+                interpret=jax.default_backend() == "cpu")

@@ -1,0 +1,9 @@
+"""Oracle for the WKV6 kernel: exact per-step recurrence."""
+from __future__ import annotations
+
+from repro.models.rwkv6 import wkv6_scan
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd) → (y, final_state)."""
+    return wkv6_scan(r, k, v, w, u)

@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape) cell on the
+production meshes and record memory / cost / collective evidence.
+
+MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun
+[--arch A] [--shape S] [--multi-pod] [--single-pod] [--out results.json]``.
+The XLA_FLAGS line above executes before any other import so the 512
+placeholder host devices exist before jax initializes.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import all_cells  # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_chips  # noqa: E402
+from repro.launch.roofline import collective_bytes, roofline_terms  # noqa: E402
+from repro.launch.steps import build_cell, lower_cell  # noqa: E402
+
+
+# Per-cell tuning shipped as deployment defaults (EXPERIMENTS.md §Perf):
+# memory-bound giants use gradient accumulation, bf16 Adam moments for the
+# 1T MoE, `dots` remat where it fits (I-A3), capacity 1.0 for kimi (I-B2).
+_BF16_MOMENTS = __import__("repro.optim", fromlist=["AdamWConfig"]).AdamWConfig(
+    moment_dtype="bfloat16"
+)
+CELL_TUNING = {
+    ("kimi-k2-1t-a32b", "train_4k"): dict(
+        microbatches=8, opt_cfg=_BF16_MOMENTS,
+        overrides={"capacity_factor": 1.0},
+    ),
+    # exception to the no-FSDP serving default: 1T params do not fit
+    # TP-only (125 GiB/chip); weight shards stay FSDP for kimi decode.
+    ("kimi-k2-1t-a32b", "decode_32k"): dict(overrides={"fsdp": True}),
+    ("qwen3-1.7b", "train_4k"): dict(
+        microbatches=2, overrides={"remat": "dots"}
+    ),
+    ("phi3-medium-14b", "train_4k"): dict(microbatches=2),
+    ("gemma2-9b", "train_4k"): dict(microbatches=2),
+    ("zamba2-7b", "train_4k"): dict(microbatches=2),
+}
+
+
+def run_one(arch: str, shape: str, mesh, mesh_name: str) -> dict:
+    t0 = time.time()
+    tuning = CELL_TUNING.get((arch, shape), {})
+    cell = build_cell(arch, shape, mesh, **tuning)
+    lowered = lower_cell(cell)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "status": "ok",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "per_device": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_live_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": coll,
+    }
+    rec["roofline"] = roofline_terms(rec["per_device"], coll)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true", help="2×16×16 only")
+    ap.add_argument("--single-pod", action="store_true", help="16×16 only")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if not args.multi_pod:
+        meshes.append(("1pod-16x16", make_production_mesh(multi_pod=False)))
+    if not args.single_pod:
+        meshes.append(("2pod-2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = []
+    for mesh_name, mesh in meshes:
+        for arch, shape, ok, why in all_cells():
+            if args.arch and arch != args.arch:
+                continue
+            if args.shape and shape != args.shape:
+                continue
+            if not ok:
+                results.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                                "status": "skipped", "reason": why})
+                print(f"SKIP {mesh_name} {arch} {shape}: {why}", flush=True)
+                continue
+            try:
+                rec = run_one(arch, shape, mesh, mesh_name)
+                pd = rec["per_device"]
+                print(
+                    f"OK   {mesh_name} {arch:22s} {shape:12s} "
+                    f"compile={rec['compile_s']:6.1f}s "
+                    f"args={pd['argument_bytes']/2**30:7.2f}GiB "
+                    f"temp={pd['temp_bytes']/2**30:7.2f}GiB "
+                    f"flops/dev={pd['flops']:.3e} "
+                    f"coll={sum(rec['collectives'].values())/2**20:.1f}MiB",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "error", "error": repr(e)[:2000]}
+                traceback.print_exc()
+                print(f"FAIL {mesh_name} {arch} {shape}: {e!r}", flush=True)
+            results.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"\n== dry-run: {n_ok} ok / {n_skip} skipped / {n_err} failed ==")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: 16×16 = 256 chips (data × model); multi-pod: 2×16×16 =
+512 chips with a leading "pod" axis (data parallelism across pods, token
+ring pod-major for the Conveyor-DP sync mode).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(tp: int = 1):
+    """Whatever this host has — used by smoke tests / examples."""
+    n = len(jax.devices())
+    assert n % tp == 0
+    return jax.make_mesh(
+        (n // tp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_chips(mesh) -> int:
+    import math
+
+    return math.prod(mesh.devices.shape)

@@ -1,0 +1,89 @@
+"""Roofline term extraction (EXPERIMENTS.md §Roofline).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  ``compiled.cost_analysis()`` is PER-DEVICE under SPMD (verified
+empirically), so terms divide by per-chip peaks directly.
+
+collective_bytes parses the compiled HLO text: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute contributes its
+output operand bytes (per-device shapes in post-SPMD HLO).
+
+cost_analysis does NOT multiply while-loop (lax.scan) bodies by their trip
+count, so scanned-layer graphs undercount — the roofline harness therefore
+compiles shallow UNROLLED variants and extrapolates per-layer deltas
+(benchmarks/roofline.py); these helpers stay pure.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# e.g.  "bf16[8,128,2048]{2,1,0} all-gather(...)" — possibly a tuple result
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (output shapes)."""
+    out = {k: 0 for k in _COLL}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in _COLL:
+            # match "<shape> <name> = <shape> kind(" or fused forms
+            if f" {kind}(" in s or s.startswith(f"{kind}("):
+                # result shape is everything before " <op-name> =" — simpler:
+                # take the shape annotation right before the op kind token
+                idx = s.find(f"{kind}(")
+                lhs = s[:idx]
+                # rightmost shape group in lhs is the result type
+                shapes = _SHAPE_RE.findall(lhs)
+                if shapes:
+                    # rebuild the tuple of result shapes: use all groups in
+                    # the segment after '=' if present
+                    eq = lhs.find("=")
+                    seg = lhs[eq + 1:] if eq >= 0 else lhs
+                    out[kind] += _shape_bytes(seg)
+                break
+    return out
+
+
+def roofline_terms(per_device: dict, coll: dict) -> dict:
+    """The three terms, in seconds (per device = per chip)."""
+    t_compute = per_device["flops"] / PEAK_FLOPS
+    t_memory = per_device.get("bytes_accessed", 0.0) / HBM_BW
+    t_coll = sum(coll.values()) / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }

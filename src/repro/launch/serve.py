@@ -1,0 +1,190 @@
+"""Serving launcher: Operation Partitioning applied to inference.
+
+The serving "application" is declared as transactions over the session
+store and the model state, and the OFFLINE ANALYSIS (core.classify — the
+actual Algorithm 1) classifies them:
+
+    decode(session)        → LOCAL  by session id (session-sticky decode)
+    open/close(session)    → LOCAL  by session id
+    swap_adapter(slot)     → GLOBAL (mutates shared model state every
+                             replica reads → total order via the belt)
+    stats()                → COMMUTATIVE (reads immutable config)
+
+Requests route to replica ``session % R`` exactly like belt clients; decode
+batches execute immediately (no cross-replica coordination — the paper's
+point); adapter swaps queue until the replica holds the token, then
+replicate as state updates.  Serializability of the swap order follows from
+the belt total order: every replica applies swaps in token order.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Database, TableSchema, Transaction, classify
+from repro.data import SyntheticLM
+from repro.models import build_model
+
+
+# -- the serving app, declared for the analyzer ------------------------------
+
+def make_serving_app():
+    db = Database(
+        tables=(
+            TableSchema("SESSIONS", ("pos", "active"), ("sid",), (256,)),
+            TableSchema("ADAPTERS", ("version",), ("slot",), (8,)),
+            TableSchema("CONFIG", ("value",), ("key",), (8,), immutable=True),
+            TableSchema("QPS_LOG", ("hits",), ("slot",), (16,), write_only=True),
+        )
+    )
+
+    def open_session(v, p):
+        v.write("SESSIONS", "active", (p["sid"],), 1)
+        v.write("SESSIONS", "pos", (p["sid"],), 0)
+        return p["sid"]
+
+    def decode(v, p):
+        # reads the adapter version (written by swap_adapter → global,
+        # replicated) and advances this session's position.
+        ver = v.read("ADAPTERS", "version", (p["slot"],))
+        v.add("SESSIONS", "pos", (p["sid"],), 1)
+        return ver
+
+    def close_session(v, p):
+        v.write("SESSIONS", "active", (p["sid"],), 0)
+        return 0
+
+    def swap_adapter(v, p):
+        # derived second write keeps this global under any partitioning
+        v.add("ADAPTERS", "version", (p["slot"],), 1)
+        v.add("ADAPTERS", "version", ((p["slot"] + 1) % 8,), 0)
+        return 0
+
+    def stats(v, p):
+        return v.read("CONFIG", "value", (p["key"],))
+
+    def log_qps(v, p):
+        v.add("QPS_LOG", "hits", (p["slot"],), 1)
+        return 0
+
+    txns = (
+        Transaction("openSession", ("sid",), open_session, max_writes=2),
+        Transaction("decode", ("sid", "slot"), decode, max_writes=1),
+        Transaction("closeSession", ("sid",), close_session, max_writes=1),
+        Transaction("swapAdapter", ("slot",), swap_adapter, max_writes=2),
+        Transaction("stats", ("key",), stats),
+        Transaction("logQps", ("slot",), log_qps, max_writes=1),
+    )
+    return db, txns
+
+
+# -- replica group ------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Session:
+    sid: int
+    cache: object
+    last_token: int
+
+
+class ReplicaGroup:
+    """One belt server: model params + its partition of sessions."""
+
+    def __init__(self, model, params, max_sessions: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.sessions: dict[int, Session] = {}
+        self.adapter_version = 0
+        self.pending_swaps: list[int] = []
+
+    def open(self, sid: int, prompt):
+        caches = self.model.init_cache(1, self.max_len)
+        logits, caches = self.model.forward_cached(
+            self.params, prompt[None], caches
+        )
+        self.sessions[sid] = Session(sid, caches, int(jnp.argmax(logits[0])))
+
+    def decode_batch(self, sids: list[int]) -> dict[int, int]:
+        out = {}
+        for sid in sids:  # per-session caches differ in fill; loop simply
+            s = self.sessions[sid]
+            tok = jnp.full((1, 1), s.last_token, jnp.int32)
+            logits, s.cache = self.model.forward_cached(
+                self.params, tok, s.cache
+            )
+            s.last_token = int(jnp.argmax(logits[0]))
+            out[sid] = s.last_token
+        return out
+
+    def apply_swap(self, version: int):
+        self.adapter_version = version  # state update: replicated swap
+
+
+def serve_demo(n_replicas=2, n_sessions=8, steps=16, scale=0.05, arch="qwen3-1.7b"):
+    from repro.launch.train import scaled_config
+
+    db, txns = make_serving_app()
+    cl = classify(db, txns)
+    print("serving-app classification (Algorithm 1):")
+    for t in txns:
+        oc = cl.classes[t.name]
+        print(f"  {t.name:14s} {oc.cls:2s} primary={oc.primary}")
+
+    cfg = scaled_config(arch, scale, 64)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    groups = [ReplicaGroup(model, params, n_sessions, 256)
+              for _ in range(n_replicas)]
+
+    ds = SyntheticLM(cfg.vocab, 16, n_sessions)
+    prompts = jnp.asarray(ds.batch(0)["tokens"])
+    for sid in range(n_sessions):
+        groups[sid % n_replicas].open(sid, prompts[sid])  # MAP routing
+
+    token_pos, swap_version = 0, 0
+    produced = {sid: [] for sid in range(n_sessions)}
+    for step in range(steps):
+        # local ops: every replica decodes ITS sessions, no coordination
+        for r, g in enumerate(groups):
+            outs = g.decode_batch(sorted(g.sessions))
+            for sid, tok in outs.items():
+                produced[sid].append(tok)
+        # a global op now and then: queue an adapter swap at its partition
+        if step % 5 == 2:
+            groups[step % n_replicas].pending_swaps.append(step)
+        # token hop: holder executes queued globals → replicate to all
+        holder = token_pos % n_replicas
+        if groups[holder].pending_swaps:
+            groups[holder].pending_swaps.clear()
+            swap_version += 1
+            for g in groups:
+                g.apply_swap(swap_version)  # passive replication
+        token_pos += 1
+    lens = {sid: len(v) for sid, v in produced.items()}
+    versions = {r: g.adapter_version for r, g in enumerate(groups)}
+    print(f"served {sum(lens.values())} tokens over {n_sessions} sessions; "
+          f"adapter versions per replica: {versions} (identical ⇒ "
+          f"belt-ordered swaps)")
+    assert len(set(versions.values())) == 1
+    return produced, versions
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--scale", type=float, default=0.05)
+    args = ap.parse_args(argv)
+    serve_demo(args.replicas, args.sessions, args.steps, args.scale, args.arch)
+
+
+if __name__ == "__main__":
+    main()

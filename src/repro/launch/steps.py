@@ -1,0 +1,340 @@
+"""Cell builder: (arch × shape × mesh) → jittable step + abstract inputs +
+shardings.  Used by the dry-run, the roofline harness, and the real train /
+serve drivers.
+
+``build_cell`` returns everything needed to
+``jax.jit(fn, in_shardings=...).lower(*args).compile()`` without allocating
+any real array (ShapeDtypeStructs all the way down).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape
+from repro.models import build_model
+from repro.models.transformer import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, adamw_state_specs, cosine_warmup
+from repro.optim.adamw import adamw_init
+from .mesh import data_axes
+
+
+# -- spec plumbing -----------------------------------------------------------
+
+
+def normalize_spec(spec: P, mesh) -> P:
+    """Drop mesh axes a spec references that this mesh doesn't have (e.g.
+    "pod" on the single-pod mesh)."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(fix(e) for e in spec))
+
+
+def shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, normalize_spec(s, mesh)),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -- batch / cache specs -------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, seq: int, batch: int, mesh):
+    """(ShapeDtypeStructs, PartitionSpecs) for one training batch."""
+    da = data_axes(mesh)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    sds = {"tokens": tok, "labels": tok}
+    specs = {"tokens": P(da, None), "labels": P(da, None)}
+    if cfg.family == "vlm":
+        n_img = min(seq // 4, 4096)
+        sds["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+        sds["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, n_img, cfg.d_model), cfg.dtype
+        )
+        sds["vision_mask"] = jax.ShapeDtypeStruct((batch, seq), jnp.bool_)
+        specs["positions"] = P(None, da, None)
+        specs["vision_embeds"] = P(da, None, None)
+        specs["vision_mask"] = P(da, None)
+    if cfg.family == "audio":
+        sds["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype)
+        specs["frames"] = P(da, None, None)
+    return sds, specs
+
+
+def cache_specs(model, cfg: ModelConfig, batch: int, max_len: int, mesh):
+    """(abstract caches, spec tree).  long-context (batch == 1) shards the
+    sequence / state dims over the data axes instead of batch —
+    sequence-parallel flash-decode, combined by GSPMD's partial softmax."""
+    da = data_axes(mesh)
+    long_ctx = batch == 1
+    kv_tp = "model" if cfg.kv_sharded else None
+    caches = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+    # when KV heads don't divide TP, shard the cache SEQ dim over `model`
+    # instead (sequence-parallel flash-decode; GSPMD combines the partial
+    # softmax) — otherwise the replicated cache dominates HBM (observed
+    # 84 GiB/dev on gemma2 decode_32k).
+    seq_tp = None if cfg.kv_sharded else "model"
+
+    def attn_spec(ndim_lead):
+        lead = (None,) * ndim_lead
+        if long_ctx:
+            return {
+                "k": P(*lead, None, da, kv_tp, None),
+                "v": P(*lead, None, da, kv_tp, None),
+                "pos": P(*((None,) * ndim_lead)) if ndim_lead else P(),
+            }
+        return {
+            "k": P(*lead, da, seq_tp, kv_tp, None),
+            "v": P(*lead, da, seq_tp, kv_tp, None),
+            "pos": P(*((None,) * ndim_lead)) if ndim_lead else P(),
+        }
+
+    if cfg.family == "ssm":
+        bspec = None if long_ctx else da
+        return caches, (
+            P(None, bspec, None),
+            P(None, bspec, None),
+            P(None, bspec, "model", None, None),
+        )
+    if cfg.family == "hybrid":
+        bspec = None if long_ctx else da
+
+        def mspec(n_lead):
+            lead = (None,) * n_lead
+            return (
+                P(*lead, bspec, None, "model"),
+                P(*lead, bspec, "model", None, None),
+            )
+
+        return caches, {
+            "mamba": mspec(2),
+            "attn": attn_spec(1),
+            "tail": mspec(1) if model.n_tail else None,
+        }
+    if cfg.family == "audio":
+        h_tp = "model"
+        b = da if not long_ctx else None
+        return caches, {
+            "self": {
+                "k": P(None, b, None if not long_ctx else da, h_tp, None),
+                "v": P(None, b, None if not long_ctx else da, h_tp, None),
+                "pos": P(None),
+            },
+            "cross": {
+                "k": P(None, b, None, h_tp, None),
+                "v": P(None, b, None, h_tp, None),
+            },
+        }
+    return caches, attn_spec(1)
+
+
+# -- step functions ------------------------------------------------------------
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, total_steps: int = 10_000,
+                    microbatches: int = 1, unroll_micro: bool = False,
+                    grad_shardings=None):
+    """Standard synchronous step.  ``microbatches > 1`` enables gradient
+    accumulation: per-micro backward completes before the next micro starts,
+    so live rematerialization residuals shrink by the micro factor.
+    ``unroll_micro`` unrolls the accumulation loop (roofline mode —
+    cost_analysis counts a lax.scan body once)."""
+
+    def grad_once(params, batch):
+        return jax.value_and_grad(model.loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grad_once(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]),
+                batch,
+            )
+
+            def acc(carry, mb):
+                loss_sum, g = carry
+                li, gi = grad_once(params, mb)
+                g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g, gi
+                )
+                return (loss_sum + li, g), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            carry = (jnp.zeros((), jnp.float32), g0)
+            if unroll_micro:
+                for i in range(microbatches):
+                    mb = jax.tree.map(lambda a: a[i], micro)
+                    carry, _ = acc(carry, mb)
+                loss_sum, grads = carry
+            else:
+                (loss_sum, grads), _ = jax.lax.scan(acc, carry, micro)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        if grad_shardings is not None:
+            # pin grads to the parameter layout: the DP reduction lowers to
+            # reduce-scatter instead of all-reduce (§Perf I-A4)
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        lr_scale = cosine_warmup(opt_state["step"], total=total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            opt_cfg, params, grads, opt_state, lr_scale
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": jnp.asarray(lr_scale, jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cfg: ModelConfig, seq: int, batch: int,
+                      cache_sharding=None):
+    def constrain(caches):
+        if cache_sharding is None:
+            return caches
+        return jax.lax.with_sharding_constraint(caches, cache_sharding)
+
+    if cfg.family == "audio":
+        def prefill(params, frames, tokens):
+            logits, caches = model.prefill(params, frames, tokens)
+            return logits, constrain(caches)
+
+        return prefill
+
+    def prefill(params, tokens):
+        caches = model.init_cache(tokens.shape[0], seq)
+        logits, caches = model.forward_cached(
+            params, tokens, caches,
+            positions=(jnp.broadcast_to(
+                jnp.arange(seq), (3, batch, seq)) if cfg.family == "vlm" else None),
+        )
+        return logits, constrain(caches)
+
+    return prefill
+
+
+def make_decode_step(model, cfg: ModelConfig):
+    if cfg.family == "audio":
+        def decode(params, caches, tokens):
+            return model.forward_cached(params, tokens, caches)
+
+        return decode
+
+    def decode(params, caches, tokens):
+        if cfg.family == "vlm":
+            B = tokens.shape[0]
+            pos = model._cache_pos(caches)
+            positions = jnp.broadcast_to(pos, (3, B, 1))
+            return model.forward_cached(params, tokens, caches,
+                                        positions=positions)
+        return model.forward_cached(params, tokens, caches)
+
+    return decode
+
+
+# -- cell assembly ---------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    fn: Any  # the step callable
+    args: tuple  # abstract (SDS) arguments
+    in_shardings: tuple
+    donate: tuple  # argnums to donate
+    model: Any
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, layer_mode="scan",
+               microbatches: int = 1, opt_cfg: AdamWConfig | None = None,
+               overrides: dict | None = None) -> Cell:
+    shape = get_shape(shape_name)
+    ov = dict(overrides or {})
+    if shape.kind == "decode":
+        # Serving deployments keep params TP-sharded but NOT FSDP-sharded:
+        # re-gathering FSDP shards over ICI on every decoded token costs
+        # ~74 ms/token on phi3-medium (§Perf I-C2) for zero memory benefit
+        # at decode batch sizes.
+        ov.setdefault("fsdp", False)
+    cfg = get_arch(arch_id, layer_mode=layer_mode, **ov)
+    model = build_model(cfg, mesh)
+    params_sds, specs = model.init(jax.random.PRNGKey(0), abstract=True)
+    p_shard = shardings(specs, mesh)
+    da = data_axes(mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        bs, bspec = batch_specs(cfg, S, B, mesh)
+        ocfg = opt_cfg or AdamWConfig()
+        opt_sds = jax.eval_shape(
+            lambda p: adamw_init(p, ocfg.moment_dtype), params_sds
+        )
+        opt_shard = shardings(adamw_state_specs(specs), mesh)
+        fn = make_train_step(model, ocfg, microbatches=microbatches,
+                             unroll_micro=layer_mode == "unroll",
+                             grad_shardings=p_shard)
+        return Cell(arch_id, shape_name, cfg, fn,
+                    (params_sds, opt_sds, bs),
+                    (p_shard, opt_shard, shardings(bspec, mesh)),
+                    donate=(0, 1), model=model)
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            model.encoder_seq = S
+            _, cspec = cache_specs(model, cfg, B, S, mesh)
+            csh = shardings(cspec, mesh)
+            frames = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+            toks = jax.ShapeDtypeStruct((B, 16), jnp.int32)
+            fn = make_prefill_step(model, cfg, S, B, cache_sharding=csh)
+            return Cell(arch_id, shape_name, cfg, fn,
+                        (params_sds, frames, toks),
+                        (p_shard,
+                         NamedSharding(mesh, P(da, None, None)),
+                         NamedSharding(mesh, P(da, None))),
+                        donate=(), model=model)
+        _, cspec = cache_specs(model, cfg, B, S, mesh)
+        csh = shardings(cspec, mesh)
+        toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        fn = make_prefill_step(model, cfg, S, B, cache_sharding=csh)
+        return Cell(arch_id, shape_name, cfg, fn, (params_sds, toks),
+                    (p_shard, NamedSharding(mesh, P(da, None))),
+                    donate=(), model=model)
+
+    # decode: one new token against a seq_len cache/state
+    if cfg.family == "audio":
+        model.encoder_seq = 1500
+    cache_sds, cspec = cache_specs(model, cfg, B, S, mesh)
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = P(da, None) if B > 1 else P(None, None)
+    fn = make_decode_step(model, cfg)
+    return Cell(arch_id, shape_name, cfg, fn,
+                (params_sds, cache_sds, toks),
+                (p_shard, shardings(cspec, mesh),
+                 NamedSharding(mesh, tok_spec)),
+                donate=(1,), model=model)
+
+
+def lower_cell(cell: Cell):
+    return jax.jit(
+        cell.fn, in_shardings=cell.in_shardings, donate_argnums=cell.donate
+    ).lower(*cell.args)

@@ -1,0 +1,1 @@
+from .api import build_model  # noqa: F401

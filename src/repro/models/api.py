@@ -1,0 +1,19 @@
+"""Model factory: config → model instance with a uniform interface.
+
+Every model exposes:
+  init(key) -> (params, specs)         specs: PartitionSpec tree
+  loss_fn(params, batch) -> scalar
+  init_cache(batch, max_len) -> caches
+  forward_cached(params, tokens, caches, ...) -> (logits, caches)   [decode]
+Whisper additionally has encode/prefill (enc-dec).
+"""
+from __future__ import annotations
+
+from .transformer import DecoderLM, ModelConfig
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig, mesh=None):
+    if cfg.family == "audio":
+        return WhisperModel(cfg, mesh=mesh)
+    return DecoderLM(cfg, mesh=mesh)

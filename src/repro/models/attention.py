@@ -1,0 +1,127 @@
+"""Attention math: GQA with q-chunked (flash-style) softmax in pure jnp.
+
+This is the XLA path used for lowering/roofline (the Pallas flash kernel in
+``repro.kernels`` is the TPU target and is validated against this).  Chunking
+the query axis bounds the live score tensor to (B, H, chunk, S_kv) — without
+it the 32k-prefill cells would materialize petabyte-scale S×S score tensors.
+
+Supports: causal masking with offset (prefill continuation / decode), sliding
+windows (gemma2 local layers), logit soft-capping (gemma2), GQA without
+materializing repeated KV heads, and explicit kv validity lengths (decode
+against a partially-filled cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attend(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset=0,
+    kv_len=None,
+    chunk: int = 512,
+    mesh=None,
+    da=None,
+    kv_seq_shard: bool = False,
+):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd); returns (B, Sq, H, hd).
+
+    H must be a multiple of Hkv (GQA).  KV heads are expanded to H before the
+    score einsum so the head axis stays shardable over the TP mesh axis even
+    when Hkv < TP (the expansion is free under sharding: each device
+    materializes only its local heads).  ``q_offset`` is the absolute
+    position of q[0] (scalar or (B,)); ``kv_len`` masks unwritten cache
+    slots.  mesh/da: activation-sharding pins (batch over data axes, heads
+    over model) — without them GSPMD drops batch sharding through the
+    q-chunk scan.
+    """
+    from .sharding import pin
+
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert H % Hkv == 0, (H, Hkv)
+    if kv_seq_shard:
+        # flash-decode layout: KV stays sharded along its SEQUENCE dim (the
+        # cache's resident layout when kv heads don't divide TP); q is
+        # replicated over `model`; every shard computes all heads over its
+        # seq slice; softmax over the sharded axis and the p·V contraction
+        # reduce with small psums instead of all-gathering the cache.
+        k = pin(k, mesh, da, "model", None, None)
+        v = pin(v, mesh, da, "model", None, None)
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if kv_seq_shard:
+        k = pin(k, mesh, da, "model", None, None)
+        v = pin(v, mesh, da, "model", None, None)
+        q = pin(q, mesh, da, None, None, None)
+    else:
+        k = pin(k, mesh, da, None, "model", None)
+        v = pin(v, mesh, da, None, "model", None)
+    scale = hd ** -0.5
+    orig_dtype = q.dtype
+
+    kv_pos = jnp.arange(Skv)
+    q_off = jnp.asarray(q_offset)
+    q_off = q_off.reshape((-1, 1)) if q_off.ndim else q_off  # (B,1) or scalar
+
+    def block(q_blk, blk_idx):
+        # q_blk: (B, C, H, hd)
+        C = q_blk.shape[1]
+        s = jnp.einsum("bchd,bshd->bhcs", q_blk.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if logit_cap is not None:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        q_pos = q_off + blk_idx * C + jnp.arange(C)  # (B,C) or (C,)
+        if q_pos.ndim == 1:
+            q_pos = q_pos[None, :]
+        m = jnp.ones((B, C, Skv), bool)
+        if causal:
+            m &= q_pos[:, :, None] >= kv_pos[None, None, :]
+        if window is not None:
+            m &= (q_pos[:, :, None] - kv_pos[None, None, :]) < window
+        if kv_len is not None:
+            kl = jnp.asarray(kv_len).reshape((-1, 1, 1))
+            m &= kv_pos[None, None, :] < kl
+        s = jnp.where(m[:, None, :, :], s, -1e30)
+        if kv_seq_shard:
+            s = pin(s, mesh, da, None, None, "model")
+        else:
+            s = pin(s, mesh, da, "model", None, None)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhcs,bshd->bchd", p, v.astype(jnp.float32))
+        if kv_seq_shard:
+            return pin(o.astype(orig_dtype), mesh, da, None, None, None)
+        return pin(o.astype(orig_dtype), mesh, da, None, "model", None)
+
+    if Sq <= chunk:
+        return block(q, 0)
+
+    assert Sq % chunk == 0, (Sq, chunk)
+    n_blocks = Sq // chunk
+    q_blocks = q.reshape(B, n_blocks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    q_blocks = pin(q_blocks, mesh, None, da, None, "model", None)
+
+    def scan_body(_, inp):
+        q_blk, idx = inp
+        q_blk = pin(q_blk, mesh, da, None, "model", None)
+        return None, block(q_blk, idx)
+
+    _, out = jax.lax.scan(scan_body, None, (q_blocks, jnp.arange(n_blocks)))
+    out = pin(out, mesh, None, da, None, "model", None)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, at):
+    """Write new K/V at position ``at`` (scalar step index) — decode path."""
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, at, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, at, axis=1)
+    return cache_k, cache_v

@@ -1,0 +1,132 @@
+"""Shared model building blocks: norms, RoPE (incl. M-RoPE), init helpers,
+and the sharding-spec convention.
+
+Sharding convention (see DESIGN.md §5): every parameter is created through
+``param(key, shape, spec)`` which records a ``PartitionSpec`` in a parallel
+tree.  Axis names: "model" = tensor parallel, FSDP = ("pod","data") on a
+weight's major input dim when cfg.fsdp is set.  Specs are consumed by the
+launcher to build in_shardings for the dry-run and real runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ParamFactory:
+    """Collects (params, specs) trees while modules declare parameters.
+
+    ``abstract=True`` creates ShapeDtypeStructs instead of arrays — used by
+    the dry-run to build full-size configs without allocating a single byte.
+    """
+
+    key: jax.Array
+    dtype: jnp.dtype = jnp.float32
+    abstract: bool = False
+
+    def __post_init__(self):
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, path: str, shape: tuple, spec: P, scale: float | None = None,
+              init: str = "normal"):
+        """Create one parameter at a '/'-separated path."""
+        if self.abstract:
+            val = jax.ShapeDtypeStruct(shape, self.dtype)
+        elif init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            val = (jax.random.normal(self._split(), shape, self.dtype) * s)
+        d_p, d_s = self.params, self.specs
+        parts = path.split("/")
+        for k in parts[:-1]:
+            d_p = d_p.setdefault(k, {})
+            d_s = d_s.setdefault(k, {})
+        d_p[parts[-1]] = val
+        d_s[parts[-1]] = spec
+        return val
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(dtype)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, sections: Sequence[int], theta: float = 1e6):
+    """Multimodal RoPE (Qwen2-VL): positions_thw (3, ..., S) gives temporal /
+    height / width indices; rotary sections split the half-dim into t/h/w
+    bands (sections sum to hd/2)."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    bands = []
+    start = 0
+    for sec, pos in zip(sections, positions_thw):
+        f = freqs[start : start + sec]
+        bands.append(pos[..., :, None, None].astype(jnp.float32) * f)
+        start += sec
+    angles = jnp.concatenate(bands, axis=-1)  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / d)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

@@ -1,0 +1,197 @@
+"""Mamba2 (SSD) block in pure JAX — the zamba2 backbone.
+
+Training path uses the chunked SSD formulation (intra-chunk attention-like
+matmuls + inter-chunk state scan) so compute lands on the MXU; the Pallas
+kernel in ``repro.kernels.mamba2_ssd`` implements the same tiling for TPU and
+is validated against the naive recurrence in its ref.py.
+
+Decode keeps an O(1) recurrent state per layer: (conv tail, SSM state
+(heads, headdim, state)) — this is what makes the 500k-context cell feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        # conv runs over x and the (single-group) B, C projections
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def in_dim(self) -> int:
+        # [z, x, B, C, dt]
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def causal_conv(x, w, state=None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+    With ``state`` (B, K-1, C) uses it as left context (decode);
+    returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(y), xp[:, -(K - 1) :]
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt):
+    di, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + cfg.conv_channels]
+    dt = zxbcdt[..., -nh:]
+    return z, xBC, dt
+
+
+def ssd_chunked(xh, dt, A_log, B, C, D, chunk: int = 128, h0=None):
+    """Chunked SSD scan.
+
+    xh: (Bt, S, H, P) inputs per head; dt: (Bt, S, H) softplus'd step sizes;
+    A_log: (H,) (A = -exp(A_log)); B, C: (Bt, S, N); D: (H,) skip.
+    Returns (y (Bt,S,H,P), final_state (Bt,H,N,P)).
+    """
+    Bt, S, H, Pd = xh.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    a = -jnp.exp(A_log.astype(jnp.float32))  # (H,)
+    dt = dt.astype(jnp.float32)
+    la = dt * a  # (Bt,S,H) log decay per step
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # Δ-scaled input
+
+    # chunk-major layout for scan: (nc, Bt, Lc, ...)
+    rc = lambda t: t.reshape((Bt, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+    la_c, x_c = rc(la), rc(xdt)
+    B_c, C_c = rc(B.astype(jnp.float32)), rc(C.astype(jnp.float32))
+
+    if h0 is None:
+        h0 = jnp.zeros((Bt, H, N, Pd), jnp.float32)
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]
+
+    def chunk_body(h, inp):
+        la_k, x_k, B_k, C_k = inp  # (Bt,Lc,H), (Bt,Lc,H,P), (Bt,Lc,N) ×2
+        cum = jnp.cumsum(la_k, axis=1)  # (Bt,Lc,H)
+        total = cum[:, -1]  # (Bt,H)
+        # intra-chunk: M_ij = (C_i·B_j) exp(cum_i - cum_j), j ≤ i.  Mask the
+        # exponent BEFORE exp — the upper triangle overflows to inf.
+        GB = jnp.einsum("bis,bjs->bij", C_k, B_k)  # (Bt,Lc,Lc)
+        ldec = cum[:, :, None, :] - cum[:, None, :, :]  # (Bt,i,j,H)
+        M = GB[..., None] * jnp.exp(
+            jnp.where(tri[None, :, :, None], ldec, -1e30)
+        )
+        y = jnp.einsum("bijh,bjhp->bihp", M, x_k)
+        # inter-chunk: y_i += (C_i · h) * exp(cum_i)
+        y += jnp.einsum("bis,bhsp->bihp", C_k, h) * jnp.exp(cum)[..., None]
+        # state update: h' = exp(total) h + Σ_j exp(total - cum_j) B_j ⊗ x_j
+        wx = jnp.exp(total[:, None] - cum)[..., None] * x_k  # (Bt,Lc,H,P)
+        h = h * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjs,bjhp->bhsp", B_k, wx
+        )
+        return h, y
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, (la_c, x_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bt, S, H, Pd)
+    y = y + xh.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_decode_step(x1, dt1, A_log, B1, C1, D, h):
+    """One-token recurrence. x1: (Bt,H,P); dt1: (Bt,H); B1,C1: (Bt,N);
+    h: (Bt,H,N,P) → (y (Bt,H,P), h')."""
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    dt1 = dt1.astype(jnp.float32)
+    decay = jnp.exp(dt1 * a)  # (Bt,H)
+    upd = jnp.einsum("bs,bhp->bhsp", B1.astype(jnp.float32),
+                     x1.astype(jnp.float32) * dt1[..., None])
+    h = h * decay[..., None, None] + upd
+    y = jnp.einsum("bs,bhsp->bhp", C1.astype(jnp.float32), h)
+    y = y + x1.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x1.dtype), h
+
+
+def mamba2_forward(p, x, cfg: Mamba2Config, *, cache=None, chunk: int = 128):
+    """Full block.  x: (Bt, S, D).  p holds in_proj (D, in_dim), conv_w
+    (K, conv_channels), A_log (H,), D (H,), dt_bias (H,), norm_w (d_inner,),
+    out_proj (d_inner, D).  cache = (conv_state, ssm_state) for decode."""
+    Bt, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    conv_state = cache[0] if cache is not None else None
+    xBC, new_conv = causal_conv(xBC, p["conv_w"], conv_state)
+    xh = xBC[..., : cfg.d_inner].reshape(Bt, S, cfg.n_heads, cfg.head_dim)
+    Bm = xBC[..., cfg.d_inner : cfg.d_inner + cfg.d_state]
+    Cm = xBC[..., cfg.d_inner + cfg.d_state :]
+
+    chunk = min(chunk, S)
+    if cache is not None and S == 1:
+        y1, new_h = ssd_decode_step(
+            xh[:, 0], dt[:, 0], p["A_log"], Bm[:, 0], Cm[:, 0], p["D"], cache[1]
+        )
+        y = y1[:, None]
+    else:
+        h0 = cache[1] if cache is not None else None
+        y, new_h = ssd_chunked(xh, dt, p["A_log"], Bm, Cm, p["D"], chunk, h0)
+
+    y = y.reshape(Bt, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"]
+    return out, (new_conv, new_h)
+
+
+def mamba2_ref_scan(xh, dt, A_log, B, C, D):
+    """Naive per-step recurrence — oracle for the chunked path and the
+    Pallas kernel."""
+    Bt, S, H, Pd = xh.shape
+    N = B.shape[-1]
+    h = jnp.zeros((Bt, H, N, Pd), jnp.float32)
+
+    def body(h, t):
+        y, h = ssd_decode_step(xh[:, t], dt[:, t], A_log, B[:, t], C[:, t], D, h)
+        return h, y
+
+    _, ys = jax.lax.scan(body, h, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def init_mamba2_params(pf, path: str, cfg: Mamba2Config, n_layers: int, fsdp_axes):
+    """Stacked (n_layers, ...) parameter block + specs."""
+    from jax.sharding import PartitionSpec as P
+
+    L = (n_layers,)
+    pf.param(f"{path}/ln", L + (cfg.d_model,), P(None, None), init="zeros")
+    pf.param(f"{path}/in_proj", L + (cfg.d_model, cfg.in_dim),
+             P(None, fsdp_axes, "model"))
+    pf.param(f"{path}/conv_w", L + (cfg.d_conv, cfg.conv_channels),
+             P(None, None, "model"))
+    pf.param(f"{path}/A_log", L + (cfg.n_heads,), P(None, "model"), init="zeros")
+    pf.param(f"{path}/D", L + (cfg.n_heads,), P(None, "model"), init="ones")
+    pf.param(f"{path}/dt_bias", L + (cfg.n_heads,), P(None, "model"), init="zeros")
+    pf.param(f"{path}/norm_w", L + (cfg.d_inner,), P(None, "model"), init="zeros")
+    pf.param(f"{path}/out_proj", L + (cfg.d_inner, cfg.d_model),
+             P(None, "model", fsdp_axes))

@@ -1,0 +1,161 @@
+"""RWKV6 "Finch" block (data-dependent decay) in pure JAX.
+
+Time-mix uses the WKV6 recurrence with per-channel data-dependent decay
+w_t = exp(-exp(w_base + lora(x))) — the architecture's signature feature —
+and a time-first bonus u.  The jnp path runs the exact per-step recurrence
+under lax.scan (the oracle); the Pallas kernel in
+``repro.kernels.rwkv6_wkv`` implements the chunked form for TPU.
+
+Decode state is O(1): (last token for time-mix shift, last token for
+channel-mix shift, WKV state (H, hd, hd)) — which is why rwkv6 runs the
+500k-context cell that quadratic-attention archs skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0  # channel-mix hidden
+    lora_rank: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def token_shift(x, last):
+    """x: (B,S,D); last: (B,D) previous token (decode continuation).
+    Returns x shifted right by one along S with ``last`` filled in."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def wkv6_scan(r, k, v, w, u):
+    """Exact WKV6 recurrence.
+
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) per-step decay in (0,1);
+    u: (H,hd) bonus.  Returns (y (B,S,H,hd), final state (B,H,hd,hd)).
+    State S[i,j]: key-dim i, value-dim j.
+    """
+    B, S, H, hd = r.shape
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(st, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], wf[:, t]  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, st + uf[..., :, None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def wkv6_step(r1, k1, v1, w1, u, state):
+    """One decode step: r1..w1 (B,H,hd); state (B,H,hd,hd)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r1, k1, v1, w1))
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", rf, state + u.astype(jnp.float32)[..., :, None] * kv)
+    state = wf[..., :, None] * state + kv
+    return y.astype(r1.dtype), state
+
+
+def time_mix(p, x, cfg: RWKV6Config, last, wkv_state):
+    """x: (B,S,D) → (out, (new_last, new_state))."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xp = token_shift(x, last)
+
+    def lerp(i):
+        return x + (xp - x) * p["mu"][i]
+
+    xr, xk, xv, xg, xw = (lerp(i) for i in range(5))
+    # data-dependent decay (the Finch contribution)
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]  # (B,S,D)
+    w = jnp.exp(-jnp.exp(p["w_base"].astype(jnp.float32)
+                         + lora.astype(jnp.float32)))  # (B,S,D) in (0,1)
+
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = xg @ p["wg"]
+    wr = w.reshape(B, S, H, hd)
+
+    if S == 1 and wkv_state is not None:
+        y1, new_state = wkv6_step(
+            r[:, 0], k[:, 0], v[:, 0], wr[:, 0], p["u"], wkv_state
+        )
+        y = y1[:, None]
+    else:
+        y, new_state = wkv6_scan(r, k, v, wr, p["u"])
+        if wkv_state is not None:
+            # continuation decode-prefill not used in training; state resets
+            pass
+
+    y = y.reshape(B, S, D)
+    y = rms_norm(y, p["ln_x"]) * jax.nn.silu(g)
+    return y @ p["wo"], (x[:, -1], new_state)
+
+
+def channel_mix(p, x, last):
+    xp = token_shift(x, last)
+    xk = x + (xp - x) * p["mu_k"]
+    xr = x + (xp - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr_g"]) * (k @ p["wv"]), x[:, -1]
+
+
+def rwkv6_block(p, x, cfg: RWKV6Config, cache=None):
+    """Full layer: ln → time-mix → ln → channel-mix (pre-norm residual).
+    cache: (tm_last, cm_last, wkv_state) or None."""
+    tm_last = cache[0] if cache is not None else jnp.zeros(
+        (x.shape[0], cfg.d_model), x.dtype
+    )
+    cm_last = cache[1] if cache is not None else jnp.zeros(
+        (x.shape[0], cfg.d_model), x.dtype
+    )
+    wkv_state = cache[2] if cache is not None else None
+
+    h = rms_norm(x, p["ln1"])
+    att, (new_tm, new_state) = time_mix(p["tm"], h, cfg, tm_last, wkv_state)
+    x = x + att
+    h = rms_norm(x, p["ln2"])
+    ffn, new_cm = channel_mix(p["cm"], h, cm_last)
+    x = x + ffn
+    return x, (new_tm, new_cm, new_state)
+
+
+def init_rwkv6_params(pf, path: str, cfg: RWKV6Config, n_layers: int, fsdp_axes):
+    from jax.sharding import PartitionSpec as P
+
+    L = (n_layers,)
+    D, r = cfg.d_model, cfg.lora_rank
+    pf.param(f"{path}/ln1", L + (D,), P(None, None), init="zeros")
+    pf.param(f"{path}/ln2", L + (D,), P(None, None), init="zeros")
+    tm = f"{path}/tm"
+    pf.param(f"{tm}/mu", L + (5, D), P(None, None, None), init="zeros")
+    pf.param(f"{tm}/w_lora_a", L + (D, r), P(None, fsdp_axes, None))
+    pf.param(f"{tm}/w_lora_b", L + (r, D), P(None, None, None), init="zeros")
+    pf.param(f"{tm}/w_base", L + (D,), P(None, None), init="zeros")
+    pf.param(f"{tm}/u", L + (cfg.n_heads, cfg.head_dim), P(None, "model", None),
+             init="zeros")
+    for n in ("wr", "wk", "wv", "wg"):
+        pf.param(f"{tm}/{n}", L + (D, D), P(None, fsdp_axes, "model"))
+    pf.param(f"{tm}/ln_x", L + (D,), P(None, "model"), init="zeros")
+    pf.param(f"{tm}/wo", L + (D, D), P(None, "model", fsdp_axes))
+    cm = f"{path}/cm"
+    pf.param(f"{cm}/mu_k", L + (D,), P(None, None), init="zeros")
+    pf.param(f"{cm}/mu_r", L + (D,), P(None, None), init="zeros")
+    pf.param(f"{cm}/wk", L + (D, cfg.d_ff), P(None, fsdp_axes, "model"))
+    pf.param(f"{cm}/wr_g", L + (D, D), P(None, fsdp_axes, None))
+    pf.param(f"{cm}/wv", L + (cfg.d_ff, D), P(None, "model", fsdp_axes))

@@ -1,0 +1,46 @@
+"""Activation sharding pins.
+
+GSPMD propagation through scans/reshapes can drop the batch sharding of
+activations (observed: full-global-batch f32 logits gathered per device).
+Production JAX stacks pin activation shardings at block boundaries; ``pin``
+does that, sanitizing per-dim (a dim that doesn't divide its mesh axes is
+left unsharded — e.g. batch=1 long-context decode).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out
+
+
+def pin(x, mesh, *spec):
+    """with_sharding_constraint(x, P(*spec)) with per-dim divisibility checks.
+
+    spec entries: None | axis-name | tuple of axis names.  Entries whose mesh
+    size doesn't divide the dim are dropped to None.
+    """
+    if mesh is None or x is None:
+        return x
+    assert len(spec) == x.ndim, (spec, x.shape)
+    fixed = tuple(
+        e if e is not None and d % _axis_size(mesh, e) == 0 else None
+        for e, d in zip(spec, x.shape)
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def data_axes_of(mesh):
+    if mesh is None:
+        return None
+    return tuple(a for a in mesh.axis_names if a != "model")

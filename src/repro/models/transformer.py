@@ -1,0 +1,628 @@
+"""Unified decoder-LM skeleton for the assigned architectures.
+
+One config dataclass + one model class covers the dense / moe / vlm / ssm /
+hybrid families (whisper's enc-dec lives in whisper.py).  Layers are stacked
+(L, ...) and executed with lax.scan (O(1)-in-depth HLO — required for the
+512-device dry-run) or unrolled (roofline mode, exact cost_analysis).
+gemma2's local/global alternation is handled by scanning over PAIRS of
+layers so the window stays a static property.
+
+TP sharding follows Megatron conventions on the ``model`` axis with GSPMD
+inserting the collectives; q-heads are padded to a multiple of the TP degree
+and KV heads are replicated when they don't divide it (DESIGN.md §5 — the
+HLO/MODEL FLOP ratio in EXPERIMENTS.md accounts for the padding).  Optional
+FSDP shards every weight's major dim over ("pod","data") — required to fit
+the 1T-param MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import attend, update_cache
+from .common import (
+    ParamFactory,
+    apply_mrope,
+    apply_rope,
+    pad_to_multiple,
+    rms_norm,
+    softcap,
+)
+from .ffn import gated_mlp, moe_block
+from .sharding import data_axes_of, pin
+from .mamba2 import Mamba2Config, init_mamba2_params, mamba2_forward
+from .rwkv6 import RWKV6Config, init_rwkv6_params, rwkv6_block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: int | None = None  # sliding-window size (gemma2 local layers)
+    alt_window: bool = False  # alternate local/global layers (gemma2)
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    act: str = "silu"
+    post_norms: bool = False  # gemma2 post-layer norms
+    tie_embeddings: bool = False
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    # ssm / hybrid
+    ssm_state: int = 0
+    attn_every: int = 0  # zamba2: shared attn after every k mamba layers
+    # vlm
+    mrope_sections: tuple | None = None
+    # execution
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"  # none | full | dots
+    layer_mode: str = "scan"  # scan | unroll
+    fsdp: bool = False
+    tp: int = 1  # TP degree used for head padding / sharding decisions
+    attn_chunk: int = 512
+    moe_shard_map: bool = True
+    capacity_factor: float = 1.25  # MoE dispatch capacity (E/top_k ⇒ no drops)
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def h_pad(self) -> int:
+        return pad_to_multiple(self.n_heads, self.tp)
+
+    @property
+    def kv_pad(self) -> int:
+        kv = self.n_kv_heads
+        while self.h_pad % kv != 0:
+            kv += 1
+        return kv
+
+    @property
+    def kv_sharded(self) -> bool:
+        return self.kv_pad % self.tp == 0
+
+    @property
+    def vocab_pad(self) -> int:
+        """Embedding rows padded so the vocab-parallel shard divides TP
+        (whisper's 51865 → 51872); logits over padded ids are masked."""
+        return pad_to_multiple(self.vocab, self.tp)
+
+    @property
+    def fsdp_axes(self):
+        return ("pod", "data") if self.fsdp else None
+
+    def n_params(self) -> float:
+        """Analytic parameter count (unpadded), for MODEL_FLOPS."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.hd
+        attn = D * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * D
+        if self.family == "ssm":  # rwkv6
+            tm = 4 * D * D + 2 * D * 64 + D * D
+            cm = 2 * D * F + D * D
+            return L * (tm + cm) + 2 * V * D
+        if self.family == "hybrid":
+            m = Mamba2Config(D, self.ssm_state)
+            mamba = D * m.in_dim + m.d_inner * D
+            n_attn = L // (self.attn_every + 1)
+            n_mamba = L - n_attn
+            return n_mamba * mamba + (attn + 3 * D * F) + 2 * V * D
+        ffn = 3 * D * F
+        if self.n_experts:
+            ffn = self.n_experts * 3 * D * F + D * self.n_experts
+        return L * (attn + ffn) + (V * D if self.tie_embeddings else 2 * V * D)
+
+    def n_active_params(self) -> float:
+        if not self.n_experts:
+            return self.n_params()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        hd = self.hd
+        attn = D * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * D
+        ffn = self.top_k * 3 * D * F + D * self.n_experts
+        return L * (attn + ffn) + 2 * self.vocab * D
+
+
+# ---------------------------------------------------------------------------
+
+
+def _spec(L_stacked: bool, *rest) -> P:
+    return P(None, *rest) if L_stacked else P(*rest)
+
+
+def _attn_param_init(pf: ParamFactory, path: str, cfg: ModelConfig,
+                     stacked: int | None):
+    D, hd = cfg.d_model, cfg.hd
+    fa = cfg.fsdp_axes
+    kv_spec = "model" if cfg.kv_sharded else None
+    L = (stacked,) if stacked else ()
+    st = stacked is not None and stacked > 0
+    pf.param(f"{path}/wq", L + (D, cfg.h_pad * hd), _spec(st, fa, "model"))
+    pf.param(f"{path}/wk", L + (D, cfg.kv_pad * hd), _spec(st, fa, kv_spec))
+    pf.param(f"{path}/wv", L + (D, cfg.kv_pad * hd), _spec(st, fa, kv_spec))
+    pf.param(f"{path}/wo", L + (cfg.h_pad * hd, D), _spec(st, "model", fa))
+    if cfg.qkv_bias:
+        pf.param(f"{path}/bq", L + (cfg.h_pad * hd,), _spec(st, "model"),
+                 init="zeros")
+        pf.param(f"{path}/bk", L + (cfg.kv_pad * hd,), _spec(st, kv_spec),
+                 init="zeros")
+        pf.param(f"{path}/bv", L + (cfg.kv_pad * hd,), _spec(st, kv_spec),
+                 init="zeros")
+    if cfg.qk_norm:
+        pf.param(f"{path}/q_norm", L + (hd,), _spec(st, None), init="zeros")
+        pf.param(f"{path}/k_norm", L + (hd,), _spec(st, None), init="zeros")
+
+
+def _attn_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=None,
+                mesh=None):
+    """x: (B,S,D) → (out, new_cache).  positions: (B,S) or (3,B,S) M-RoPE."""
+    da = data_axes_of(mesh)
+    B, S, D = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.h_pad, hd)
+    k = k.reshape(B, S, cfg.kv_pad, hd)
+    v = v.reshape(B, S, cfg.kv_pad, hd)
+    kv_tp = "model" if cfg.kv_sharded else None
+    q = pin(q, mesh, da, None, "model", None)
+    k = pin(k, mesh, da, None, kv_tp, None)
+    v = pin(v, mesh, da, None, kv_tp, None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        pos_1d = positions[0]
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos_1d = positions
+
+    if cache is None:
+        out = attend(q, k, v, causal=True, window=window,
+                     logit_cap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+                     mesh=mesh, da=da)
+        new_cache = None
+    else:
+        pos = cache["pos"]  # scalar write offset
+        ck, cv = update_cache(cache["k"], cache["v"], k, v, pos)
+        # kv-replicated archs keep the cache sharded along SEQ over `model`;
+        # decode then uses the flash-decode layout (q replicated over model,
+        # partial softmax per seq shard, small psums) instead of
+        # all-gathering the cache — §Perf iteration I-C1.
+        seq_shard = (not cfg.kv_sharded) and S == 1
+        if seq_shard:
+            ck = pin(ck, mesh, da, "model", None, None)
+            cv = pin(cv, mesh, da, "model", None, None)
+        out = attend(
+            q, ck, cv, causal=True, window=window, logit_cap=cfg.attn_softcap,
+            q_offset=pos_1d[:, 0], kv_len=pos + S, chunk=cfg.attn_chunk,
+            mesh=mesh, da=da, kv_seq_shard=seq_shard,
+        )
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+    out = out.reshape(B, S, cfg.h_pad * hd) @ p["wo"]
+    return pin(out, mesh, da, None, None), new_cache
+
+
+def _moe_apply(p, x, cfg: ModelConfig, mesh):
+    """x: (B,S,D) → (out, aux_loss); shard_map grouped-GEMM dispatch."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    if (mesh is None or not cfg.moe_shard_map
+            or math.prod(mesh.devices.shape) == 1):
+        out, aux = moe_block(xt, p["router"], p["w_gate"], p["w_up"],
+                             p["w_down"], top_k=cfg.top_k, act=cfg.act,
+                             capacity_factor=cfg.capacity_factor)
+        return out.reshape(B, S, D), aux
+
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def local(xt, rw, wg, wu, wd):
+        out, aux = moe_block(xt, rw, wg, wu, wd, top_k=cfg.top_k, act=cfg.act,
+                             capacity_factor=cfg.capacity_factor)
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux, "model")
+        return out, aux
+
+    out, aux = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(data_axes, None), P(None, None), P(None, None, "model"),
+                  P(None, None, "model"), P(None, "model", None)),
+        out_specs=(P(data_axes, None), P()),
+        check_vma=False,
+    )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out.reshape(B, S, D), aux
+
+
+class DecoderLM:
+    """Families: dense, moe, vlm, ssm (rwkv6), hybrid (zamba2)."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        if cfg.family == "hybrid":
+            assert cfg.attn_every > 0
+            per = cfg.attn_every + 1  # k mamba blocks + 1 shared-attn use
+            self.n_groups = cfg.n_layers // per
+            assert self.n_groups >= 1, (cfg.n_layers, per)
+            self.n_tail = cfg.n_layers - self.n_groups * per
+            m_hd = 64
+            while (2 * cfg.d_model) % m_hd:  # reduced configs: keep integral
+                m_hd //= 2
+            self.mcfg = Mamba2Config(cfg.d_model, cfg.ssm_state,
+                                     head_dim=m_hd)
+        if cfg.family == "ssm":
+            self.rcfg = RWKV6Config(cfg.d_model, d_ff=cfg.d_ff)
+        if cfg.alt_window:
+            assert cfg.n_layers % 2 == 0, "alt_window needs even layer count"
+
+    # -- parameters ----------------------------------------------------------
+    def init(self, key, abstract: bool = False) -> tuple[dict, dict]:
+        cfg = self.cfg
+        pf = ParamFactory(key, dtype=cfg.dtype, abstract=abstract)
+        D, V = cfg.d_model, cfg.vocab
+        fa = cfg.fsdp_axes
+        pf.param("embed", (cfg.vocab_pad, D), P("model", fa), scale=0.02)
+        if not cfg.tie_embeddings:
+            pf.param("lm_head", (D, cfg.vocab_pad), P(fa, "model"))
+        pf.param("final_norm", (D,), P(None), init="zeros")
+
+        nL = cfg.n_layers
+        L = (nL,)
+        if cfg.family == "ssm":
+            init_rwkv6_params(pf, "layers", self.rcfg, nL, fa)
+        elif cfg.family == "hybrid":
+            init_mamba2_params(pf, "groups/mamba", self.mcfg,
+                               self.n_groups * cfg.attn_every, fa)
+            pf.param("groups/ln_attn", (self.n_groups, D), P(None, None),
+                     init="zeros")
+            _attn_param_init(pf, "shared_attn", cfg, None)
+            pf.param("shared_ln", (D,), P(None), init="zeros")
+            pf.param("shared_mlp/w_gate", (D, cfg.d_ff), P(fa, "model"))
+            pf.param("shared_mlp/w_up", (D, cfg.d_ff), P(fa, "model"))
+            pf.param("shared_mlp/w_down", (cfg.d_ff, D), P("model", fa))
+            if self.n_tail:
+                init_mamba2_params(pf, "tail", self.mcfg, self.n_tail, fa)
+        else:
+            pf.param("layers/ln1", L + (D,), P(None, None), init="zeros")
+            pf.param("layers/ln2", L + (D,), P(None, None), init="zeros")
+            if cfg.post_norms:
+                pf.param("layers/ln1_post", L + (D,), P(None, None), init="zeros")
+                pf.param("layers/ln2_post", L + (D,), P(None, None), init="zeros")
+            _attn_param_init(pf, "layers/attn", cfg, nL)
+            if cfg.n_experts:
+                pf.param("layers/mlp/router", L + (D, cfg.n_experts),
+                         P(None, None, None), scale=0.02)
+                pf.param("layers/mlp/w_gate", L + (cfg.n_experts, D, cfg.d_ff),
+                         P(None, None, fa, "model"))
+                pf.param("layers/mlp/w_up", L + (cfg.n_experts, D, cfg.d_ff),
+                         P(None, None, fa, "model"))
+                pf.param("layers/mlp/w_down", L + (cfg.n_experts, cfg.d_ff, D),
+                         P(None, None, "model", fa))
+            else:
+                pf.param("layers/mlp/w_gate", L + (D, cfg.d_ff),
+                         P(None, fa, "model"))
+                pf.param("layers/mlp/w_up", L + (D, cfg.d_ff),
+                         P(None, fa, "model"))
+                pf.param("layers/mlp/w_down", L + (cfg.d_ff, D),
+                         P(None, "model", fa))
+        return pf.params, pf.specs
+
+    # -- block bodies ----------------------------------------------------------
+    def _dense_block(self, pl, x, positions, cache, window):
+        cfg = self.cfg
+        h = rms_norm(x, pl["ln1"])
+        attn_out, new_cache = _attn_apply(
+            pl["attn"], h, cfg, positions=positions, cache=cache,
+            window=window, mesh=self.mesh,
+        )
+        if cfg.post_norms:
+            attn_out = rms_norm(attn_out, pl["ln1_post"])
+        x = x + attn_out
+        h = rms_norm(x, pl["ln2"])
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.n_experts:
+            mlp_out, aux = _moe_apply(pl["mlp"], h, cfg, self.mesh)
+        else:
+            mlp_out = gated_mlp(h, pl["mlp"]["w_gate"], pl["mlp"]["w_up"],
+                                pl["mlp"]["w_down"], act=cfg.act)
+        if cfg.post_norms:
+            mlp_out = rms_norm(mlp_out, pl["ln2_post"])
+        return x + mlp_out, new_cache, aux
+
+    def _maybe_remat(self, fn):
+        cfg = self.cfg
+        if cfg.remat == "none":
+            return fn
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        return jax.checkpoint(fn, policy=policy)
+
+    # -- forward -------------------------------------------------------------
+    def _backbone(self, params, x, positions, caches=None):
+        """x: (B,S,D) embeddings → (final hidden, new caches, aux loss)."""
+        cfg = self.cfg
+        training = caches is None
+
+        if cfg.family == "ssm":
+            def body(x, pl, cache):
+                y, new_cache = rwkv6_block(pl, x, self.rcfg, cache)
+                return y, (None if training else new_cache), jnp.zeros((), jnp.float32)
+
+            return self._stack_loop(body, x, params["layers"], caches,
+                                    cfg.n_layers)
+        if cfg.family == "hybrid":
+            return self._hybrid_backbone(params, x, positions, caches)
+
+        if cfg.alt_window:
+            # pair the layers: even index → local window, odd → global
+            lp = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers // 2, 2) + a.shape[1:]),
+                params["layers"],
+            )
+            cc = (None if training else jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers // 2, 2) + a.shape[1:]), caches
+            ))
+
+            def body(x, pl, cache):
+                aux = jnp.zeros((), jnp.float32)
+                new_cs = []
+                for j, win in enumerate((cfg.window, None)):
+                    plj = jax.tree.map(lambda a: a[j], pl)
+                    cj = None if cache is None else jax.tree.map(
+                        lambda a: a[j], cache
+                    )
+                    x, nc, a = self._dense_block(plj, x, positions, cj, win)
+                    aux += a
+                    new_cs.append(nc)
+                nc = (None if training else
+                      jax.tree.map(lambda *zs: jnp.stack(zs), *new_cs))
+                return x, nc, aux
+
+            x, nc, aux = self._stack_loop(body, x, lp, cc, cfg.n_layers // 2)
+            if not training:
+                # un-pair back to flat (L, ...) cache layout
+                nc = jax.tree.map(
+                    lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), nc
+                )
+            return x, nc, aux
+
+        def body(x, pl, cache):
+            return self._dense_block(pl, x, positions, cache, cfg.window)
+
+        return self._stack_loop(body, x, params["layers"], caches, cfg.n_layers)
+
+    def _stack_loop(self, body, x, layer_params, caches, n: int):
+        """Run ``body(x, layer_slice, cache_slice) -> (x, new_cache, aux)``
+        over stacked layers via scan or unroll."""
+        cfg = self.cfg
+        da = data_axes_of(self.mesh)
+
+        def entry(x, pl, cache):
+            # The barrier stops XLA hoisting per-layer bf16→f32 converts of
+            # the saved residual out of the backward loop — without it the
+            # whole (L,B,S,D) stack materializes again in f32 (observed:
+            # +14 GiB/device on qwen3 train_4k).
+            x = jax.lax.optimization_barrier(x)
+            return body(pin(x, self.mesh, da, None, None), pl, cache)
+
+        fn = self._maybe_remat(entry)
+
+        if cfg.layer_mode == "scan":
+            def scan_body(carry, inp):
+                x, aux = carry
+                pl, cache = inp
+                x, nc, a = fn(x, pl, cache)
+                return (x, aux + a), nc
+
+            (x, aux), new_caches = jax.lax.scan(
+                scan_body, (x, jnp.zeros((), jnp.float32)),
+                (layer_params, caches),
+            )
+            return x, new_caches, aux
+
+        aux = jnp.zeros((), jnp.float32)
+        ncs = []
+        for i in range(n):
+            pl = jax.tree.map(lambda a: a[i], layer_params)
+            ci = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            x, nc, a = fn(x, pl, ci)
+            aux += a
+            ncs.append(nc)
+        new_caches = (None if caches is None else
+                      jax.tree.map(lambda *zs: jnp.stack(zs), *ncs))
+        return x, new_caches, aux
+
+    def _hybrid_backbone(self, params, x, positions, caches):
+        """zamba2: groups of (attn_every mamba blocks + 1 shared-attn use),
+        plus a mamba tail.  Shared attention/MLP weights are reused (weight
+        tying) but every use has its own KV cache."""
+        cfg = self.cfg
+        per = cfg.attn_every
+        training = caches is None
+        g = params["groups"]
+        mamba_stacked = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, per) + a.shape[1:]), g["mamba"]
+        )
+
+        def group_body(x, pl, cache):
+            pm, ln_attn = pl
+            mc, ac = (None, None) if cache is None else cache
+            new_mc = []
+            for j in range(per):
+                pmj = jax.tree.map(lambda a: a[j], pm)
+                mcj = None if mc is None else jax.tree.map(lambda a: a[j], mc)
+                h = rms_norm(x, pmj["ln"])
+                y, c = mamba2_forward(pmj, h, self.mcfg, cache=mcj)
+                x = x + y
+                new_mc.append(c)
+            h = rms_norm(x, ln_attn)
+            attn_out, new_ac = _attn_apply(
+                params["shared_attn"], h, cfg, positions=positions, cache=ac,
+                mesh=self.mesh,
+            )
+            x = x + attn_out
+            h = rms_norm(x, params["shared_ln"])
+            x = x + gated_mlp(h, params["shared_mlp"]["w_gate"],
+                              params["shared_mlp"]["w_up"],
+                              params["shared_mlp"]["w_down"], act=cfg.act)
+            if training:
+                return x, None, jnp.zeros((), jnp.float32)
+            new_mc = jax.tree.map(lambda *zs: jnp.stack(zs), *new_mc)
+            return x, (new_mc, new_ac), jnp.zeros((), jnp.float32)
+
+        group_caches = (None if training else
+                        (caches["mamba"], caches["attn"]))
+        x, new_gc, _ = self._stack_loop(
+            group_body, x, (mamba_stacked, g["ln_attn"]), group_caches,
+            self.n_groups,
+        )
+
+        new_tail = None
+        if self.n_tail:
+            def tail_body(x, pl, cache):
+                h = rms_norm(x, pl["ln"])
+                y, c = mamba2_forward(pl, h, self.mcfg, cache=cache)
+                return x + y, (None if training else c), jnp.zeros((), jnp.float32)
+
+            x, new_tail, _ = self._stack_loop(
+                tail_body, x, params["tail"],
+                None if training else caches["tail"], self.n_tail,
+            )
+
+        new_caches = None
+        if not training:
+            new_caches = {"mamba": new_gc[0], "attn": new_gc[1],
+                          "tail": new_tail}
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    # -- public entry points ---------------------------------------------------
+    def _embed(self, params, tokens, vision_embeds=None, vision_mask=None):
+        x = params["embed"][tokens] * (
+            math.sqrt(self.cfg.d_model) if self.cfg.post_norms else 1.0
+        )
+        if vision_embeds is not None:
+            # scatter precomputed patch embeddings over masked positions
+            n_img = vision_embeds.shape[1]
+            idx = jnp.cumsum(vision_mask.astype(jnp.int32), axis=1) - 1
+            idx = jnp.clip(idx, 0, n_img - 1)
+            img = jnp.take_along_axis(vision_embeds, idx[..., None], axis=1)
+            x = jnp.where(vision_mask[..., None], img.astype(x.dtype), x)
+        x = x.astype(self.cfg.dtype)
+        return pin(x, self.mesh, data_axes_of(self.mesh), None, None)
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"])
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (h @ w).astype(jnp.float32)
+        if cfg.final_softcap:
+            logits = softcap(logits, cfg.final_softcap)
+        if cfg.vocab_pad != cfg.vocab:
+            logits = jnp.where(jnp.arange(cfg.vocab_pad) < cfg.vocab,
+                               logits, -1e30)
+        return pin(logits, self.mesh, data_axes_of(self.mesh), None, "model")
+
+    def loss_fn(self, params, batch):
+        """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = masked),
+        optional positions / vision_embeds / vision_mask."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self._embed(params, tokens, batch.get("vision_embeds"),
+                        batch.get("vision_mask"))
+        h, _, aux = self._backbone(params, x, positions, caches=None)
+        logits = self._logits(params, h)
+        labels = batch["labels"]
+        mask = labels >= 0
+        lab = jnp.clip(labels, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+        return loss + 0.01 * aux
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        hd = cfg.hd
+        kv_shape = (batch, max_len, cfg.kv_pad, hd)
+
+        def attn_cache(n: int | None):
+            lead = (n,) if n else ()
+            return {
+                "k": jnp.zeros(lead + kv_shape, cfg.dtype),
+                "v": jnp.zeros(lead + kv_shape, cfg.dtype),
+                "pos": jnp.zeros(lead, jnp.int32),
+            }
+
+        if cfg.family == "ssm":
+            r = self.rcfg
+            return (
+                jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+                jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+                jnp.zeros((cfg.n_layers, batch, r.n_heads, r.head_dim,
+                           r.head_dim), jnp.float32),
+            )
+        if cfg.family == "hybrid":
+            m = self.mcfg
+
+            def mcache(lead):
+                return (
+                    jnp.zeros(lead + (batch, m.d_conv - 1, m.conv_channels),
+                              cfg.dtype),
+                    jnp.zeros(lead + (batch, m.n_heads, m.d_state, m.head_dim),
+                              jnp.float32),
+                )
+
+            return {
+                "mamba": mcache((self.n_groups, cfg.attn_every)),
+                "attn": attn_cache(self.n_groups),
+                "tail": mcache((self.n_tail,)) if self.n_tail else None,
+            }
+        return attn_cache(cfg.n_layers)
+
+    def forward_cached(self, params, tokens, caches, positions=None,
+                       vision_embeds=None, vision_mask=None):
+        """Prefill (S>1) or decode (S=1) against caches; returns
+        (logits_last (B,V), new_caches)."""
+        B, S = tokens.shape
+        if positions is None:
+            base = self._cache_pos(caches)
+            positions = base + jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self._embed(params, tokens, vision_embeds, vision_mask)
+        h, new_caches, _ = self._backbone(params, x, positions, caches=caches)
+        logits = self._logits(params, h[:, -1:])
+        return logits[:, 0], new_caches
+
+    def _cache_pos(self, caches):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 0  # rwkv is position-free
+        if cfg.family == "hybrid":
+            return caches["attn"]["pos"][0]
+        return caches["pos"][0]

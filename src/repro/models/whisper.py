@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, T_enc, D).  The encoder is bidirectional
+self-attention with sinusoidal positions; the decoder is causal self-attn +
+cross-attn with learned positions.  Decode caches: self K/V ring + the
+encoder output projected to per-layer cross K/V once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import attend, update_cache
+from .common import ParamFactory, layer_norm, sinusoidal_positions
+from .transformer import ModelConfig
+
+
+def _proj_init(pf, path, cfg, stacked: int):
+    D, hd = cfg.d_model, cfg.hd
+    fa = cfg.fsdp_axes
+    L = (stacked,)
+    pf.param(f"{path}/wq", L + (D, cfg.h_pad * hd), P(None, fa, "model"))
+    pf.param(f"{path}/wk", L + (D, cfg.h_pad * hd), P(None, fa, "model"))
+    pf.param(f"{path}/wv", L + (D, cfg.h_pad * hd), P(None, fa, "model"))
+    pf.param(f"{path}/wo", L + (cfg.h_pad * hd, D), P(None, "model", fa))
+
+
+def _mlp_init(pf, path, cfg, stacked: int):
+    D, F = cfg.d_model, cfg.d_ff
+    fa = cfg.fsdp_axes
+    L = (stacked,)
+    pf.param(f"{path}/w1", L + (D, F), P(None, fa, "model"))
+    pf.param(f"{path}/b1", L + (F,), P(None, "model"), init="zeros")
+    pf.param(f"{path}/w2", L + (F, D), P(None, "model", fa))
+    pf.param(f"{path}/b2", L + (D,), P(None, None), init="zeros")
+
+
+def _ln_init(pf, path, stacked: int, d: int):
+    pf.param(f"{path}/w", (stacked, d), P(None, None), init="ones")
+    pf.param(f"{path}/b", (stacked, d), P(None, None), init="zeros")
+
+
+def _mha(p, cfg, xq, xkv=None, *, causal, cache=None, kv_len=None, q_offset=0):
+    B, Sq, D = xq.shape
+    hd = cfg.hd
+    src = xq if xkv is None else xkv
+    q = (xq @ p["wq"]).reshape(B, Sq, cfg.h_pad, hd)
+    if cache is not None and "pos" in cache:
+        # decode self-attention: append to ring
+        k = (xq @ p["wk"]).reshape(B, Sq, cfg.h_pad, hd)
+        v = (xq @ p["wv"]).reshape(B, Sq, cfg.h_pad, hd)
+        ck, cv = update_cache(cache["k"], cache["v"], k, v, cache["pos"])
+        out = attend(q, ck, cv, causal=True, q_offset=cache["pos"],
+                     kv_len=cache["pos"] + Sq, chunk=cfg.attn_chunk)
+        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + Sq}
+    elif cache is not None:
+        # cross-attention with precomputed K/V
+        out = attend(q, cache["k"], cache["v"], causal=False,
+                     chunk=cfg.attn_chunk)
+        new_cache = cache
+    else:
+        k = (src @ p["wk"]).reshape(B, -1, cfg.h_pad, hd)
+        v = (src @ p["wv"]).reshape(B, -1, cfg.h_pad, hd)
+        out = attend(q, k, v, causal=causal, q_offset=q_offset,
+                     chunk=cfg.attn_chunk)
+        new_cache = None
+    return out.reshape(B, Sq, cfg.h_pad * hd) @ p["wo"], new_cache
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"], approximate=True) @ p["w2"] + p["b2"]
+
+
+class WhisperModel:
+    """Config reuse: n_layers = decoder layers; encoder_layers mirrored."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None, encoder_seq: int = 1500):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.encoder_seq = encoder_seq
+
+    def init(self, key, abstract: bool = False):
+        cfg = self.cfg
+        pf = ParamFactory(key, dtype=cfg.dtype, abstract=abstract)
+        D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+        fa = cfg.fsdp_axes
+        pf.param("embed", (cfg.vocab_pad, D), P("model", fa), scale=0.02)
+        pf.param("pos_dec", (4096, D), P(None, None), scale=0.02)
+        _proj_init(pf, "enc/attn", cfg, L)
+        _mlp_init(pf, "enc/mlp", cfg, L)
+        _ln_init(pf, "enc/ln1", L, D)
+        _ln_init(pf, "enc/ln2", L, D)
+        _proj_init(pf, "dec/self_attn", cfg, L)
+        _proj_init(pf, "dec/cross_attn", cfg, L)
+        _mlp_init(pf, "dec/mlp", cfg, L)
+        _ln_init(pf, "dec/ln1", L, D)
+        _ln_init(pf, "dec/ln2", L, D)
+        _ln_init(pf, "dec/ln3", L, D)
+        pf.param("final_ln/w", (D,), P(None), init="ones")
+        pf.param("final_ln/b", (D,), P(None), init="zeros")
+        return pf.params, pf.specs
+
+    def encode(self, params, frames):
+        """frames: (B, T_enc, D) precomputed frame embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype) + sinusoidal_positions(
+            frames.shape[1], cfg.d_model
+        ).astype(cfg.dtype)
+
+        def body(x, pl):
+            h = layer_norm(x, pl["ln1"]["w"], pl["ln1"]["b"])
+            a, _ = _mha(pl["attn"], cfg, h, causal=False)
+            x = x + a
+            h = layer_norm(x, pl["ln2"]["w"], pl["ln2"]["b"])
+            return x + _mlp(pl["mlp"], h), None
+
+        if cfg.layer_mode == "scan":
+            x, _ = jax.lax.scan(body, x, params["enc"])
+        else:
+            for i in range(cfg.n_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc"]))
+        return x
+
+    def _decoder(self, params, tokens, enc_out, caches, pos0):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(cfg.dtype)
+        pos = pos0 + jnp.arange(S)
+        x = x + params["pos_dec"][pos][None].astype(cfg.dtype)
+
+        def body(x, pl, cache):
+            h = layer_norm(x, pl["ln1"]["w"], pl["ln1"]["b"])
+            a, nc_self = _mha(pl["self_attn"], cfg, h, causal=True,
+                              cache=None if cache is None else cache["self"],
+                              q_offset=pos0)
+            x = x + a
+            h = layer_norm(x, pl["ln2"]["w"], pl["ln2"]["b"])
+            if cache is None:
+                a, _ = _mha(pl["cross_attn"], cfg, h, enc_out, causal=False)
+                nc = None
+            else:
+                a, _ = _mha(pl["cross_attn"], cfg, h, causal=False,
+                            cache=cache["cross"])
+                nc = {"self": nc_self, "cross": cache["cross"]}
+            x = x + a
+            h = layer_norm(x, pl["ln3"]["w"], pl["ln3"]["b"])
+            return x + _mlp(pl["mlp"], h), nc
+
+        if cfg.layer_mode == "scan":
+            def scan_body(x, inp):
+                pl, cache = inp
+                return body(x, pl, cache)
+
+            x, new_caches = jax.lax.scan(scan_body, x, (params["dec"], caches))
+        else:
+            ncs = []
+            for i in range(cfg.n_layers):
+                pl = jax.tree.map(lambda a: a[i], params["dec"])
+                ci = None if caches is None else jax.tree.map(
+                    lambda a: a[i], caches
+                )
+                x, nc = body(x, pl, ci)
+                ncs.append(nc)
+            new_caches = (None if caches is None else
+                          jax.tree.map(lambda *zs: jnp.stack(zs), *ncs))
+        x = layer_norm(x, params["final_ln"]["w"], params["final_ln"]["b"])
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        if cfg.vocab_pad != cfg.vocab:
+            logits = jnp.where(jnp.arange(cfg.vocab_pad) < cfg.vocab,
+                               logits, -1e30)
+        return logits, new_caches
+
+    def loss_fn(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        logits, _ = self._decoder(params, batch["tokens"], enc_out, None, 0)
+        labels = batch["labels"]
+        mask = labels >= 0
+        lab = jnp.clip(labels, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        hd = cfg.hd
+        L = cfg.n_layers
+        z = lambda s: jnp.zeros(s, cfg.dtype)
+        return {
+            "self": {"k": z((L, batch, max_len, cfg.h_pad, hd)),
+                     "v": z((L, batch, max_len, cfg.h_pad, hd)),
+                     "pos": jnp.zeros((L,), jnp.int32)},
+            "cross": {"k": z((L, batch, self.encoder_seq, cfg.h_pad, hd)),
+                      "v": z((L, batch, self.encoder_seq, cfg.h_pad, hd))},
+        }
+
+    def prefill(self, params, frames, tokens):
+        """Encode audio, precompute cross K/V, run decoder prefix."""
+        cfg = self.cfg
+        B = frames.shape[0]
+        enc_out = self.encode(params, frames)
+        hd = cfg.hd
+
+        def cross_kv(pl):
+            k = (enc_out @ pl["cross_attn"]["wk"]).reshape(
+                B, -1, cfg.h_pad, hd
+            )
+            v = (enc_out @ pl["cross_attn"]["wv"]).reshape(
+                B, -1, cfg.h_pad, hd
+            )
+            return k, v
+
+        if cfg.layer_mode == "scan":
+            _, (cks, cvs) = jax.lax.scan(
+                lambda c, pl: (c, cross_kv(pl)), None, params["dec"]
+            )
+        else:
+            outs = [cross_kv(jax.tree.map(lambda a: a[i], params["dec"]))
+                    for i in range(cfg.n_layers)]
+            cks = jnp.stack([o[0] for o in outs])
+            cvs = jnp.stack([o[1] for o in outs])
+
+        caches = self.init_cache(B, tokens.shape[1] + 1)
+        caches["cross"] = {"k": cks, "v": cvs}
+        logits, caches = self._decoder(params, tokens, None, caches, 0)
+        return logits[:, -1], caches
+
+    def forward_cached(self, params, tokens, caches):
+        pos0 = caches["self"]["pos"][0]
+        logits, new_caches = self._decoder(params, tokens, None, caches, pos0)
+        return logits[:, -1], new_caches

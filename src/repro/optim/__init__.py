@@ -1,0 +1,9 @@
+from .adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_state_specs,
+    adamw_update,
+    clip_by_global_norm,
+)
+from .compress import int8_compress, int8_decompress  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401

@@ -1,0 +1,39 @@
+"""Int8 gradient/delta compression with error feedback.
+
+Used by the Conveyor-DP sync mode: parameter deltas circulating on the token
+ring are quantized to int8 with a per-tensor fp32 scale; the quantization
+residual is fed back into the next round's delta (error feedback keeps the
+long-run update unbiased).  4× less ICI traffic on the belt.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(tree, error=None):
+    """tree → (int8 tree, scales tree, new error tree)."""
+    if error is None:
+        error = jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), tree)
+
+    def one(t, e):
+        t32 = t.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(t32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(t32 / scale), -127, 127).astype(jnp.int8)
+        new_e = t32 - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat, tdef = jax.tree.flatten(tree)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(t, e) for t, e in zip(flat, flat_e)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        tdef.unflatten([o[1] for o in out]),
+        tdef.unflatten([o[2] for o in out]),
+    )
+
+
+def int8_decompress(q_tree, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(dtype), q_tree, scales
+    )

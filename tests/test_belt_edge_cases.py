@@ -1,0 +1,74 @@
+"""Belt edge cases: queue/token capacity pressure, pure-global workloads,
+single-server degeneration, empty rounds."""
+import numpy as np
+
+from repro.core import (
+    Engine,
+    EngineSpec,
+    check_serializable,
+    classify,
+    run_workload,
+)
+from repro.core.workloads import micro
+
+
+def _engine(n, **kw):
+    db = micro.make_db()
+    cl = classify(db, micro.TXNS)
+    return db, Engine(db, micro.TXNS, cl, EngineSpec(n_servers=n, **kw))
+
+
+def test_all_global_workload():
+    db, eng = _engine(3, batch=4, queue_cap=64, token_cap=256)
+    ops = micro.sample_ops(24, local_ratio=0.0, seed=9)
+    init = db.init_state()
+    belt, results = run_workload(eng, init, ops)
+    assert all(r.is_global for r in results)
+    check_serializable(db, eng, init, belt, results)
+
+
+def test_all_local_workload_never_tokens():
+    db, eng = _engine(3, batch=4)
+    ops = micro.sample_ops(24, local_ratio=1.0, seed=10)
+    init = db.init_state()
+    belt, results = run_workload(eng, init, ops)
+    assert not any(r.is_global for r in results)
+    assert int(np.asarray(belt.token.next_gseq)) == 0  # belt stayed empty
+    check_serializable(db, eng, init, belt, results)
+
+
+def test_single_server_degenerates_to_serial():
+    db, eng = _engine(1, batch=4)
+    ops = micro.sample_ops(20, local_ratio=0.5, seed=11)
+    init = db.init_state()
+    belt, results = run_workload(eng, init, ops)
+    check_serializable(db, eng, init, belt, results)
+
+
+def test_token_capacity_overflow_detected():
+    """A token too small for the global burst must raise the overflow flag
+    (bounded-capacity backpressure is explicit, never silent)."""
+    db, eng = _engine(2, batch=8, queue_cap=64, token_cap=4)
+    ops = micro.sample_ops(40, local_ratio=0.0, seed=12)
+    init = db.init_state()
+    try:
+        belt, results = run_workload(eng, init, ops)
+    except AssertionError as e:
+        assert "token overflow" in str(e) or "ops never executed" in str(e)
+    else:
+        # if it survived, capacity was sufficient after all — flag must be off
+        assert not bool(np.asarray(belt.token.overflow))
+
+
+def test_repeated_keys_same_partition():
+    """Many ops on ONE key: total order must match program order at the
+    owning server (FIFO within a partition)."""
+    ops = [("localOp", {"k": 7, "d": i + 1}) for i in range(12)]
+    db, eng = _engine(3, batch=4)
+    init = db.init_state()
+    belt, results = run_workload(eng, init, ops)
+    check_serializable(db, eng, init, belt, results)
+    # replies are prefix sums 1, 1+2, ... iff executed in program order
+    want = np.cumsum([i + 1 for i in range(12)])
+    got = [r.reply for r in results]
+    assert got == want.tolist(), got

@@ -1,0 +1,152 @@
+"""Conveyor-DP (the belt as the gradient-sync layer): replica convergence,
+compression accounting, and equivalence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.conveyor_dp import ConveyorDP
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.adamw import adamw_init
+from repro.data import SyntheticLM
+
+
+def _setup(R, compress, lr=0.05):
+    params = {"w": jnp.zeros((16,), jnp.float32)}
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    def step_fn(params, opt, batch):
+        def loss(p):
+            return jnp.mean((p["w"] - batch["y"]) ** 2)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt, gn = adamw_update(cfg, params, g, opt)
+        return params, opt, {"loss": l, "grad_norm": gn}
+
+    belt = ConveyorDP(
+        jax.jit(step_fn), [params] * R, [adamw_init(params) for _ in range(R)],
+        compress=compress,
+    )
+    ds = SyntheticLM(vocab=64, seq_len=16, global_batch=R, seed=1)
+
+    def batches(step):
+        b = ds.batch(step)
+        return [{"y": jnp.asarray(b["tokens"][r], jnp.float32)} for r in range(R)]
+
+    return belt, batches
+
+
+def test_replicas_identical_after_drain_uncompressed():
+    """Additive deltas commute ⇒ after drain every replica holds the same
+    parameters (the belt's agreement property for commutative updates)."""
+    belt, batches = _setup(R=3, compress=False)
+    for s in range(8):
+        belt.round(batches(s))
+    belt.drain()
+    for r in range(1, 3):
+        np.testing.assert_allclose(
+            np.asarray(belt.params[0]["w"]), np.asarray(belt.params[r]["w"]),
+            atol=1e-6,
+        )
+
+
+def test_compressed_drift_bounded():
+    belt, batches = _setup(R=2, compress=True)
+    for s in range(10):
+        belt.round(batches(s))
+    belt.drain()
+    drift = float(jnp.max(jnp.abs(belt.params[0]["w"] - belt.params[1]["w"])))
+    scale = float(jnp.max(jnp.abs(belt.params[0]["w"]))) + 1e-6
+    assert drift < 0.15 * scale, (drift, scale)
+    # wire savings ≈ 4× (int8 vs f32)
+    assert belt.stats.bytes_shipped * 3 < belt.stats.bytes_uncompressed
+
+
+def test_belt_makes_progress():
+    belt, batches = _setup(R=2, compress=False, lr=0.2)
+    first = belt.round(batches(0))[0]["loss"]
+    for s in range(1, 25):
+        last = belt.round(batches(s))
+    belt.drain()
+    assert last[0]["loss"] < first * 0.7, (first, last[0]["loss"])
+
+
+def test_ring_delta_exchange_spmd():
+    """In-JAX belt hop: int8 permute over a ring axis (multi-device)."""
+    import subprocess, sys, textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.conveyor_dp import ring_delta_exchange
+        mesh = jax.make_mesh((4,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4) + 1
+        xs = jax.device_put(x, NamedSharding(mesh, P("pod", None)))
+        f = jax.jit(jax.shard_map(
+            lambda d: ring_delta_exchange(d, "pod", 4),
+            mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None),
+            check_vma=False))
+        y = np.asarray(f(xs))
+        want = np.roll(np.asarray(x), 1, axis=0)
+        assert np.allclose(y, want, atol=np.abs(want).max() / 100), (y, want)
+        txt = f.lower(xs).compile().as_text()
+        assert txt.count("collective-permute(") >= 1
+        # int8 on the wire: the permuted payload is s8
+        assert "s8[" in txt
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd="/root/repo", timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_spmd_belt_equals_virtual():
+    """Full protocol: shard_map deployment ≡ VirtualBelt (subprocess with 4
+    host devices)."""
+    import subprocess, sys, textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import classify, Engine, EngineSpec, VirtualBelt
+        from repro.core.spmd import make_spmd_belt, init_spmd_state
+        from repro.core.serial import make_batches
+        from repro.core.workloads import micro
+        db = micro.make_db()
+        cl = classify(db, micro.TXNS)
+        eng = Engine(db, micro.TXNS, cl,
+                     EngineSpec(n_servers=4, batch=4, queue_cap=16, token_cap=64))
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        round_fn = make_spmd_belt(eng, mesh, "data")
+        state = init_spmd_state(eng, db.init_state())
+        sh = lambda tree: jax.tree.map(
+            lambda a: jax.device_put(a, NamedSharding(
+                mesh, P("data", *([None] * (a.ndim - 1))))), tree)
+        dbs, queues, tokens, applied = [sh(x) for x in state]
+        vb = VirtualBelt(eng, db.init_state())
+        ops = micro.sample_ops(24, local_ratio=0.5, seed=5)
+        pending = [(i, t, p) for i, (t, p) in enumerate(ops)]
+        for rnd in range(14):
+            take, pending = pending[:6], pending[6:]
+            batch, lo = make_batches(eng, take, rnd)
+            pending = lo + pending
+            dbs, queues, tokens, applied, *_ = round_fn(
+                dbs, queues, tokens, applied, rnd, sh(batch))
+            vb.run_round(batch)
+        v, s = jax.device_get(vb.dbs), jax.device_get(dbs)
+        for k in v.arrays:
+            assert np.array_equal(v.arrays[k], s.arrays[k]), k
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd="/root/repo", timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

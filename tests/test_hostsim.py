@@ -1,0 +1,85 @@
+"""Host-level simulator (paper §7 evaluation machinery): sanity + paper-
+shaped qualitative results."""
+import numpy as np
+
+from repro.core import Engine, EngineSpec, classify
+from repro.core.hostsim import (
+    SimOp,
+    latency,
+    op_source_from_workload,
+    peak_throughput,
+    simulate,
+)
+from repro.core.workloads import micro, tpcw
+
+
+def _const_source(is_global=False, n=4, read_only=False):
+    ops = [SimOp(is_global, h, read_only, (h,)) for h in range(n)]
+
+    def src(rng):
+        return ops[int(rng.integers(n))]
+
+    return src
+
+
+def test_latency_matrix():
+    lan = latency(4, wan=False)
+    wan = latency(5, wan=True)
+    assert lan.max() <= 1.0 and np.allclose(np.diag(lan), 0)
+    assert wan[0, 1] == 253.0 and wan[1, 0] == 253.0  # paper Table 2 G↔J
+
+
+def test_local_ops_scale_linearly():
+    src = _const_source(n=8)
+    t1 = simulate("conveyor", src, 1, 32, duration_ms=5000).throughput
+    t8 = simulate("conveyor", src, 8, 256, duration_ms=5000).throughput
+    assert t8 > 4 * t1
+
+
+def test_conveyor_beats_twopc_on_tpcw():
+    """Paper Fig. 3 qualitative claim."""
+    db = tpcw.make_db()
+    cl = classify(db, tpcw.TXNS)
+    eng = Engine(db, tpcw.TXNS, cl, EngineSpec(n_servers=8))
+    src = op_source_from_workload(eng, tpcw.sample_ops(2000, seed=1), 8)
+    tc, _ = peak_throughput("conveyor", src, 8, client_grid=(32, 128),
+                            duration_ms=5000)
+    tp, _ = peak_throughput("twopc", src, 8, client_grid=(32, 128),
+                            duration_ms=5000)
+    assert tc > 1.5 * tp, (tc, tp)
+
+
+def test_wan_conveyor_beats_centralized():
+    """Paper Fig. 4 qualitative claim: under load, Eliá's peak WAN
+    throughput beats the centralized server (which saturates), and local
+    ops complete at intra-site latency."""
+    db = micro.make_db()
+    cl = classify(db, micro.TXNS)
+    eng = Engine(db, micro.TXNS, cl, EngineSpec(n_servers=5))
+    src = op_source_from_workload(
+        eng, micro.sample_ops(2000, local_ratio=0.8, seed=2), 5
+    )
+    tc, rc = peak_throughput("conveyor", src, 5, wan=True,
+                             client_grid=(128, 512, 1024), duration_ms=8000)
+    tz, _ = peak_throughput("central", src, 5, wan=True,
+                            client_grid=(128, 512, 1024), duration_ms=8000)
+    assert tc > 1.5 * tz, (tc, tz)
+    # local ops at ~intra-site latency (paper Table 3's 29–35 ms regime)
+    light = simulate("conveyor", src, 5, 16, duration_ms=8000, wan=True)
+    assert light.mean_local_ms < 60, light.mean_local_ms
+
+
+def test_local_ratio_monotonicity():
+    """Paper Fig. 5: more local ops ⇒ higher sustainable throughput."""
+    db = micro.make_db()
+    cl = classify(db, micro.TXNS)
+    eng = Engine(db, micro.TXNS, cl, EngineSpec(n_servers=3))
+    ths = []
+    for ratio in (0.1, 0.5, 0.9):
+        src = op_source_from_workload(
+            eng, micro.sample_ops(1500, local_ratio=ratio, seed=3), 3
+        )
+        t, _ = peak_throughput("conveyor", src, 3, wan=True,
+                               client_grid=(32, 128), duration_ms=6000)
+        ths.append(t)
+    assert ths[0] < ths[1] < ths[2], ths

@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+key = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,hd", [
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 8, 2, 64),
+    (1, 256, 256, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,cap", [(None, None), (64, None), (None, 30.0)])
+def test_flash_attention(B, Sq, Skv, H, Hkv, hd, dtype, window, cap):
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), dtype)
+    out = flash_attention_op(q, k, v, window=window, logit_cap=cap,
+                             bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, window=window, logit_cap=cap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,hd,bk", [
+    (2, 512, 8, 2, 64, 128),
+    (3, 256, 4, 4, 128, 64),
+    (1, 1024, 16, 2, 64, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, H, Hkv, hd, bk, dtype):
+    from repro.kernels.decode_attention.ops import decode_attention_op
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    kv_len = (jnp.arange(B, dtype=jnp.int32) * 37 + S // 3) % S + 1
+    out = decode_attention_op(q, k, v, kv_len, bk=bk)
+    ref = decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("Bt,S,H,P,N,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+    (1, 64, 8, 16, 8, 64),  # chunk > S/2 path
+])
+def test_mamba2_ssd(Bt, S, H, P, N, chunk):
+    from repro.kernels.mamba2_ssd.ops import ssd_op
+    from repro.kernels.mamba2_ssd.ref import ssd_ref
+
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.5
+    D = jnp.full((H,), 0.3)
+    out = ssd_op(xh, dt, A_log, B, C, D, chunk=min(chunk, S))
+    ref = ssd_ref(xh, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (2, 64, 2, 32, 16),
+    (1, 128, 4, 64, 32),
+])
+def test_rwkv6_wkv(B, S, H, hd, chunk):
+    from repro.kernels.rwkv6_wkv.ops import wkv6_op
+    from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    y = wkv6_op(r, k, v, w, u, chunk=chunk)
+    yr, _ = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("R,W,K,bt", [(256, 4, 16, 64), (512, 8, 48, 256)])
+def test_delta_apply(R, W, K, bt):
+    from repro.kernels.delta_apply.ops import delta_apply_op
+    from repro.kernels.delta_apply.ref import delta_apply_ref
+
+    ks = [jax.random.PRNGKey(i) for i in range(4)]
+    table = jax.random.randint(ks[0], (R, W), 0, 100)
+    rows = jax.random.randint(ks[1], (K,), 0, R)
+    vals = jax.random.randint(ks[2], (K, W), 0, 100)
+    valid = jax.random.bernoulli(ks[3], 0.8, (K,))
+    out = delta_apply_op(table, rows, vals, valid, bt=bt)
+    ref = delta_apply_ref(table, rows, vals, valid)
+    assert jnp.array_equal(out, ref)
+
+
+def test_delta_apply_duplicate_rows_token_order():
+    """Later records overwrite earlier ones — the belt's serial order."""
+    from repro.kernels.delta_apply.ops import delta_apply_op
+
+    table = jnp.zeros((64, 2), jnp.int32)
+    rows = jnp.array([5, 5, 5], jnp.int32)
+    vals = jnp.array([[1, 1], [2, 2], [3, 3]], jnp.int32)
+    valid = jnp.array([True, True, True])
+    out = delta_apply_op(table, rows, vals, valid, bt=64)
+    assert out[5].tolist() == [3, 3]

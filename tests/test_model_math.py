@@ -1,0 +1,123 @@
+"""Model-math invariants: chunked == naive attention, SSD chunked == scan,
+capacity MoE == dense reference, rope properties (hypothesis)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models.attention import attend
+from repro.models.common import apply_mrope, apply_rope
+from repro.models.ffn import moe_block
+from repro.models.mamba2 import mamba2_ref_scan, ssd_chunked
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+key = jax.random.PRNGKey(0)
+
+
+def test_attend_chunked_equals_naive():
+    B, S, H, Hkv, hd = 2, 128, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    out = attend(q, k, v, chunk=32)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_attend_decode_kv_len_mask():
+    B, S, H, hd = 2, 64, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    kv_len = jnp.array([10, 20])
+    out = attend(q, k, v, causal=True, q_offset=kv_len - 1, kv_len=kv_len)
+    # manual: only first kv_len positions participate
+    for b in range(B):
+        ref = flash_attention_ref(
+            q[b : b + 1], k[b : b + 1, : int(kv_len[b])],
+            v[b : b + 1, : int(kv_len[b])], causal=False,
+        )
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref[0]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_chunked_equals_scan():
+    Bt, S, H, P, N = 2, 96, 3, 16, 8
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.5
+    D = jnp.full((H,), 0.5)
+    y, _ = ssd_chunked(xh, dt, A_log, B, C, D, chunk=32)
+    ref = mamba2_ref_scan(xh, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_moe_capacity_equals_dense_reference():
+    T, D, F, E, K = 32, 16, 24, 4, 2
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D))
+    rw = jax.random.normal(ks[1], (D, E)) * 0.1
+    wg = jax.random.normal(ks[2], (E, D, F)) * 0.1
+    wu = jax.random.normal(ks[3], (E, D, F)) * 0.1
+    wd = jax.random.normal(ks[4], (E, F, D)) * 0.1
+    out, _ = moe_block(x, rw, wg, wu, wd, top_k=K, capacity_factor=float(E) / K)
+    probs = jax.nn.softmax(x @ rw, -1)
+    gv, ei = jax.lax.top_k(probs, K)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = jnp.zeros((T, D))
+    for t in range(T):
+        for k_ in range(K):
+            e = int(ei[t, k_])
+            h = jax.nn.silu(x[t] @ wg[e]) * (x[t] @ wu[e])
+            ref = ref.at[t].add(gv[t, k_] * (h @ wd[e]))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_moe_capacity_drops_overflow_gracefully():
+    """With capacity_factor ≪ 1 output stays finite and gradients flow."""
+    T, D, F, E, K = 64, 8, 8, 4, 2
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D))
+    args = [jax.random.normal(k, s) * 0.1 for k, s in zip(
+        ks[1:], [(D, E), (E, D, F), (E, D, F), (E, F, D)])]
+    out, aux = moe_block(x, *args, top_k=K, capacity_factor=0.25)
+    assert np.isfinite(np.asarray(out)).all() and np.isfinite(float(aux))
+    g = jax.grad(lambda x: moe_block(x, *args, top_k=K,
+                                     capacity_factor=0.25)[0].sum())(x)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(shift=st.integers(1, 64))
+def test_rope_relative_position_property(shift):
+    """RoPE invariant: ⟨rope(q,p+s), rope(k,p'+s)⟩ = ⟨rope(q,p), rope(k,p')⟩
+    — attention scores depend only on relative offsets."""
+    hd = 32
+    ks = jax.random.split(jax.random.PRNGKey(shift), 2)
+    q = jax.random.normal(ks[0], (1, 1, 1, hd))
+    k = jax.random.normal(ks[1], (1, 1, 1, hd))
+    p = jnp.array([[5]])
+    p2 = jnp.array([[13]])
+    a = jnp.sum(apply_rope(q, p) * apply_rope(k, p2))
+    b = jnp.sum(apply_rope(q, p + shift) * apply_rope(k, p2 + shift))
+    np.testing.assert_allclose(float(a), float(b), atol=1e-3, rtol=1e-3)
+
+
+def test_mrope_reduces_to_rope_on_text():
+    """With t=h=w position (text tokens), M-RoPE == 1-D RoPE."""
+    hd = 32
+    q = jax.random.normal(key, (1, 4, 2, hd))
+    pos = jnp.arange(4)[None]
+    pos3 = jnp.broadcast_to(pos, (3, 1, 4))
+    a = apply_mrope(q, pos3, (8, 4, 4), theta=1e4)
+    b = apply_rope(q, pos, theta=1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

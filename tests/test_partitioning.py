@@ -1,0 +1,130 @@
+"""Algorithm 1 + classification (paper §3) — unit + property tests."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import Database, TableSchema, Transaction, classify
+from repro.core.classify import COMMUTATIVE, DUAL, GLOBAL, LOCAL, op_partition
+from repro.core.partition import optimize_partitioning, residual_clauses
+from repro.core.rwsets import extract_rwsets
+from repro.core.workloads import micro, rubis, tpcw
+
+
+def test_paper_worked_example():
+    """§3.1: createCart/doCart conflict on SC.ID becomes local under
+    P = sid for both."""
+    db = tpcw.make_db()
+    cl = classify(db, tpcw.TXNS)
+    assert cl.P["createCart"] == "sid"
+    assert cl.P["doCart"] == "sid"
+    assert cl.classes["createCart"].cls == LOCAL
+    assert cl.classes["doCart"].cls == LOCAL
+
+
+def test_tpcw_classification_matches_paper_structure():
+    db = tpcw.make_db()
+    cl = classify(db, tpcw.TXNS)
+    c = cl.counts()
+    # paper Table 1 structure: sizable local majority, few global, some
+    # commutative
+    assert c[LOCAL] >= 5 and c[GLOBAL] >= 2 and c[COMMUTATIVE] >= 2
+    assert cl.classes["doBuyConfirm"].cls == GLOBAL  # shared stock
+    assert cl.classes["adminUpdateItem"].cls == GLOBAL  # admin ops
+    assert cl.classes["getStatic"].cls == COMMUTATIVE
+    assert cl.classes["logClick"].cls == COMMUTATIVE
+
+
+def test_rubis_dual_key():
+    """§6: RUBiS storeBid uses the double-key scheme (local iff user and
+    item route together)."""
+    db = rubis.make_db()
+    cl = classify(db, rubis.TXNS)
+    oc = cl.classes["storeBid"]
+    assert oc.cls == DUAL
+    assert {oc.primary, oc.secondary} == {"uid", "iid"}
+    # runtime dual routing
+    txn = [t for t in rubis.TXNS if t.name == "storeBid"][0]
+    co_routed = {"uid": 4, "iid": 8, "amt": 5}  # 4 % 4 == 8 % 4
+    server, is_global = op_partition(txn, oc, co_routed, n_servers=4)
+    assert not is_global
+    crossed = {"uid": 4, "iid": 7, "amt": 5}
+    _, is_global = op_partition(txn, oc, crossed, n_servers=4)
+    assert is_global
+
+
+def test_partitioning_minimizes_cost():
+    db = tpcw.make_db()
+    rw = {t.name: extract_rwsets(db, t) for t in tpcw.TXNS}
+    P, conflicts, best = optimize_partitioning(db, tpcw.TXNS, rw)
+    # the chosen P must beat the trivial no-partitioning assignment
+    from repro.core.partition import cost
+
+    none_P = {t.name: None for t in tpcw.TXNS}
+    weights = {t.name: t.weight for t in tpcw.TXNS}
+    assert best <= cost(none_P, conflicts, weights)
+
+
+def test_local_ops_have_no_residual_violations():
+    """Classification invariant: a LOCAL transaction has no residual
+    cross-partition ww clause and nobody remote reads from it."""
+    for wl in (tpcw, rubis, micro.make_db() and micro):
+        db = wl.make_db()
+        cl = classify(db, wl.TXNS)
+        for t in wl.TXNS:
+            if cl.classes[t.name].cls != LOCAL:
+                continue
+            for cf in cl.conflicts:
+                if t.name not in (cf.t, cf.t2):
+                    continue
+                for c in residual_clauses(cf, cl.P):
+                    assert c.kind != "ww", (t.name, c)
+                    writer = cf.t2 if c.kind == "rf" else cf.t
+                    assert writer != t.name, (t.name, c)
+
+
+# -- property: generated schemas ------------------------------------------------
+
+
+@st.composite
+def random_app(draw):
+    n_tables = draw(st.integers(1, 3))
+    tables = tuple(
+        TableSchema(f"T{i}", ("a", "b"), ("k",), (16,)) for i in range(n_tables)
+    )
+    db = Database(tables=tables)
+    n_txn = draw(st.integers(2, 5))
+    txns = []
+    for i in range(n_txn):
+        tbl = f"T{draw(st.integers(0, n_tables - 1))}"
+        kind = draw(st.sampled_from(["read", "write", "rmw"]))
+        attr = draw(st.sampled_from(["a", "b"]))
+
+        def body(v, p, tbl=tbl, kind=kind, attr=attr):
+            if kind == "read":
+                return v.read(tbl, attr, (p["x"],))
+            if kind == "write":
+                v.write(tbl, attr, (p["x"],), p["y"])
+                return 0
+            v.add(tbl, attr, (p["x"],), p["y"])
+            return 0
+
+        txns.append(Transaction(f"t{i}", ("x", "y"), body, max_writes=1))
+    return db, tuple(txns)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_app())
+def test_classification_total_and_sound(app):
+    db, txns = app
+    cl = classify(db, txns)
+    assert set(cl.classes) == {t.name for t in txns}
+    for t in txns:
+        oc = cl.classes[t.name]
+        assert oc.cls in (COMMUTATIVE, LOCAL, GLOBAL, DUAL)
+        if oc.cls == COMMUTATIVE:
+            assert not any(t.name in (cf.t, cf.t2) for cf in cl.conflicts)
+        if oc.cls == LOCAL:
+            for cf in cl.conflicts:
+                if t.name in (cf.t, cf.t2):
+                    for c in residual_clauses(cf, cl.P):
+                        writer = cf.t2 if c.kind == "rf" else cf.t
+                        assert c.kind != "ww" and writer != t.name

@@ -1,0 +1,181 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+fault-tolerant driver, straggler monitor."""
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.data import SyntheticLM
+from repro.ft import FTConfig, StragglerMonitor, TrainDriver
+from repro.ft.driver import InjectedFailure
+from repro.checkpointing import latest_step, restore, save
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    int8_compress,
+    int8_decompress,
+)
+
+
+# -- optimizer ----------------------------------------------------------------
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 20.0) < 1e-4
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-4
+
+
+def test_bf16_moments_shape_and_dtype():
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    st8 = adamw_init(params, "bfloat16")
+    assert st8["m"]["w"].dtype == jnp.bfloat16
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4, max_size=16))
+def test_int8_error_feedback_unbiased(vals):
+    """Error feedback property: over repeated compressions of the SAME
+    value, the cumulative decompressed sum approaches the true sum."""
+    x = {"v": jnp.asarray(vals, jnp.float32)}
+    err = None
+    total = jnp.zeros_like(x["v"])
+    n = 8
+    for _ in range(n):
+        q, s, err = int8_compress(x, err)
+        total = total + int8_decompress(q, s)["v"]
+    np.testing.assert_allclose(
+        np.asarray(total), np.asarray(x["v"]) * n,
+        atol=2 * float(jnp.max(jnp.abs(x["v"])) / 127 + 1e-6), rtol=0.05,
+    )
+
+
+# -- data ----------------------------------------------------------------------
+
+
+def test_data_deterministic_and_sharded():
+    ds = SyntheticLM(vocab=1000, seq_len=32, global_batch=8, seed=3)
+    a = ds.batch(5)
+    b = ds.batch(5)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    # host shards partition the global batch
+    parts = [ds.batch(5, host=h, n_hosts=4)["tokens"] for h in range(4)]
+    merged = np.zeros_like(a["tokens"])
+    for h, p in enumerate(parts):
+        merged[h::4] = p
+    assert np.array_equal(merged, a["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 1000
+
+
+def test_data_is_learnable_signal():
+    ds = SyntheticLM(vocab=64, seq_len=64, global_batch=4, seed=0)
+    b = ds.batch(0)
+    # period-64 copy structure ⇒ token t at position p equals token at p+64
+    assert np.array_equal(b["tokens"][:, 0], ds.batch(0)["tokens"][:, 0])
+
+
+# -- checkpoint / restart --------------------------------------------------------
+
+
+def _toy_setup(lr=0.05):
+    params = {"w": jnp.arange(8, dtype=jnp.float32)}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    def step_fn(params, opt, batch):
+        def loss(p):
+            return jnp.sum((p["w"] - batch["y"]) ** 2)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt, gn = adamw_update(cfg, params, g, opt)
+        return params, opt, {"loss": l, "grad_norm": gn}
+
+    ds = SyntheticLM(vocab=100, seq_len=8, global_batch=1, seed=0)
+
+    def batch_fn(s):
+        return {"y": jnp.asarray(ds.batch(s)["tokens"][0, :8], jnp.float32)}
+
+    return params, opt, jax.jit(step_fn), batch_fn
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params, opt, _, _ = _toy_setup()
+    save(str(tmp_path), 7, {"params": params, "opt": opt})
+    assert latest_step(str(tmp_path)) == 7
+    like = {"params": params, "opt": opt}
+    out = restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(like)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_failure_injection_and_bitexact_resume(tmp_path):
+    """Kill at step 12, restart from ckpt, final state must equal an
+    uninterrupted run (deterministic pipeline ⇒ bit-exact recovery)."""
+    params, opt, step_fn, batch_fn = _toy_setup()
+
+    # uninterrupted run
+    ref = TrainDriver(step_fn, batch_fn, params, opt,
+                      FTConfig(ckpt_dir=str(tmp_path / "ref"), ckpt_every=5))
+    ref.run(20)
+
+    # interrupted run
+    d1 = TrainDriver(step_fn, batch_fn, params, opt,
+                     FTConfig(ckpt_dir=str(tmp_path / "ft"), ckpt_every=5,
+                              fail_at_step=12))
+    with pytest.raises(InjectedFailure):
+        d1.run(20)
+    # "new process": fresh driver, resume from latest checkpoint
+    d2 = TrainDriver(step_fn, batch_fn, params, opt,
+                     FTConfig(ckpt_dir=str(tmp_path / "ft"), ckpt_every=5))
+    assert d2.maybe_resume() and d2.step == 10
+    d2.run(20 - d2.step)
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(d2.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint(tmp_path):
+    params, opt, step_fn, batch_fn = _toy_setup()
+    d = TrainDriver(step_fn, batch_fn, params, opt,
+                    FTConfig(ckpt_dir=str(tmp_path), ckpt_every=4,
+                             async_ckpt=True))
+    d.run(10)
+    assert latest_step(str(tmp_path)) == 10
+
+
+# -- straggler -------------------------------------------------------------------
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(n=4, threshold=2.0)
+    for r in range(6):
+        for p in range(4):
+            mon.observe(p, 1.0 if p != 2 else 5.0)
+    plan = mon.plan()
+    assert plan["stragglers"] == [2]
+    assert plan["action"] == "skip_token_turn"
+
+
+def test_no_false_positives():
+    mon = StragglerMonitor(n=4)
+    for r in range(6):
+        for p in range(4):
+            mon.observe(p, 1.0 + 0.01 * p)
+    assert mon.plan()["stragglers"] == []
